@@ -1,0 +1,58 @@
+"""Benchmark helpers: wall-clock timing of jit'd callables on this host.
+
+CPU timings are *relative* evidence (this container has no TPU): every
+benchmark pairs them with roofline-derived byte/flop counts so the TPU
+projection is explicit.  Pallas kernels are excluded from wall-time runs
+(interpret mode measures the Python interpreter, not the kernel) — their
+performance case is made through the §Roofline analysis instead.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kw) -> float:
+    """Median wall-time (seconds) of fn(*args) with jax sync."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+class Reporter:
+    """Collects (name, us_per_call, derived) rows, prints CSV."""
+
+    def __init__(self, table: str):
+        self.table = table
+        self.rows: List[Dict] = []
+
+    def add(self, name: str, seconds: float, **derived):
+        self.rows.append({"name": name, "us_per_call": seconds * 1e6,
+                          **derived})
+
+    def print_csv(self):
+        if not self.rows:
+            return
+        keys = ["name", "us_per_call"] + sorted(
+            {k for r in self.rows for k in r} - {"name", "us_per_call"})
+        print(f"\n# {self.table}")
+        print(",".join(keys))
+        for r in self.rows:
+            print(",".join(_fmt(r.get(k, "")) for k in keys))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.3f}" if abs(v) < 1e4 else f"{v:.4e}"
+    return str(v)

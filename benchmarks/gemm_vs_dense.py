@@ -1,0 +1,63 @@
+"""Paper Table 2 analogue: instruction/operation overhead of the
+mixed-precision GEMM vs the dense GEMM, from compiled-HLO op counts.
+
+The paper reports: INT4×FP16 needs 64.66% more *instructions* than
+cuBLAS FP16×FP16 (dequantization work) but only 2.89% more cycles —
+instruction-level parallelism hides the dequant.  The TPU analogue:
+count HLO flops (MXU work) and elementwise ops (VPU dequant work) of
+both paths with the trip-count-aware analyzer, and HBM bytes, showing
+(i) the extra VPU work ratio and (ii) the 4× weight-byte saving that
+dominates at decode batch sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing as PK
+from repro.core.gemm import dense_matmul, mp_matmul
+from repro.core.precision import get_policy
+from repro.roofline import hlo_cost
+
+from .common import Reporter
+
+K, N = 4096, 4096
+
+
+def _costs(fn, *specs):
+    # weights are passed as lowered ARGUMENTS — as closure constants XLA
+    # would constant-fold the dequantization out of the measured module.
+    c = jax.jit(fn).lower(*specs).compile()
+    return hlo_cost.analyze(c.as_text())
+
+
+def run(reporter=None) -> Reporter:
+    r = reporter or Reporter("table2_op_overhead")
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (K, N), jnp.float32) * 0.05
+    p4 = PK.pack_weight(w, bits=4)
+    pol = get_policy("w4a16kv8")
+    wd_s = jax.ShapeDtypeStruct((K, N), jnp.bfloat16)
+    p4_s = jax.eval_shape(lambda: p4)
+
+    for M in (16, 256):
+        xs = jax.ShapeDtypeStruct((M, K), jnp.bfloat16)
+        dense_c = _costs(dense_matmul, xs, wd_s)
+        mp_c = _costs(lambda x, p: mp_matmul(x, p, pol, impl="xla"),
+                      xs, p4_s)
+        naive_c = _costs(lambda x, p: mp_matmul(x, p, pol, impl="naive"),
+                         xs, p4_s)
+        r.add(f"dense_M{M}", 0.0, flops=dense_c.flops, bytes=dense_c.bytes,
+              extra_op_pct=0.0)
+        r.add(f"int4_fused_M{M}", 0.0, flops=mp_c.flops, bytes=mp_c.bytes,
+              extra_op_pct=100.0 * (mp_c.flops / dense_c.flops - 1.0),
+              byte_saving_pct=100.0 * (1.0 - mp_c.bytes / dense_c.bytes))
+        r.add(f"int4_naive_M{M}", 0.0, flops=naive_c.flops,
+              bytes=naive_c.bytes,
+              extra_op_pct=100.0 * (naive_c.flops / dense_c.flops - 1.0),
+              byte_saving_pct=100.0 * (1.0 - naive_c.bytes / dense_c.bytes))
+    return r
+
+
+if __name__ == "__main__":
+    run().print_csv()

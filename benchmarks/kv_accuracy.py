@@ -1,0 +1,65 @@
+"""Paper Appendix E analogue: accuracy equivalence of low-bit KV caches.
+
+No external eval datasets offline, so the harness measures what Appendix E
+implies mechanistically: per-token logit drift and top-1/top-5 agreement
+of kv8/kv4/kvfp8 decoding vs the kv16 reference, on a briefly-trained
+reduced model (trained so logits are peaked, not random-flat — agreement
+on a random model is vacuous).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.precision import get_policy
+from repro.models.registry import build
+from repro.training.loop import train
+
+from .common import Reporter
+
+ARCH = "smollm-360m"
+N_PROMPTS = 8
+PLEN = 12
+
+
+def run(reporter=None) -> Reporter:
+    r = reporter or Reporter("appendixE_kv_accuracy")
+    cfg = get_reduced(ARCH)
+    res = train(cfg, n_steps=60, batch=8, seq=48, lr=2e-3, log_every=1000)
+    params = res["params"]
+    model = build(cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab, (N_PROMPTS, PLEN))
+
+    def decode_logits(fmt):
+        policy = get_policy(f"w4a16{fmt}")
+        outs = []
+        for p in prompts:
+            cache = model.init_cache(policy, 1, 32)
+            toks = jnp.asarray(p[None, :-1], jnp.int32)
+            _, cache = model.prefill(params, policy, toks, cache)
+            lg, _ = model.decode_step(
+                params, policy, jnp.asarray(p[None, -1:], jnp.int32),
+                cache, PLEN - 1)
+            outs.append(np.asarray(lg[0], np.float32))
+        return np.stack(outs)
+
+    ref = decode_logits("kv16")
+    ref_top1 = ref.argmax(-1)
+    ref_top5 = np.argsort(-ref, -1)[:, :5]
+    for fmt in ("kvfp8", "kv8", "kv4"):
+        lg = decode_logits(fmt)
+        drift = np.abs(lg - ref).max(axis=-1)
+        top1 = (lg.argmax(-1) == ref_top1).mean()
+        in_top5 = np.mean([lg[i].argmax() in ref_top5[i]
+                           for i in range(len(lg))])
+        r.add(f"{fmt}_vs_kv16", 0.0, max_logit_drift=float(drift.max()),
+              mean_logit_drift=float(drift.mean()),
+              top1_agree=float(top1), top1_in_ref_top5=float(in_top5))
+    return r
+
+
+if __name__ == "__main__":
+    run().print_csv()

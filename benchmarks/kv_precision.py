@@ -1,0 +1,55 @@
+"""Paper Fig. 18/19/21 analogue: decode throughput vs KV-cache precision
+(kv16 / kv8 / kvfp8 / kv4) at increasing sequence lengths — the paper's
+"benefits grow with sequence length" claim (max 57.9% at 4-bit long-seq).
+
+`kv_bytes_step` is the per-step cache read traffic — the roofline quantity
+that drives the TPU projection (decode is memory-bound; step time ∝ cache
+bytes once S is large).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.core.precision import get_policy
+from repro.models.registry import build
+
+from .common import Reporter, time_fn
+
+ARCH = "smollm-360m"
+FMTS = ("kv16", "kvfp8", "kv8", "kv4")
+SEQS = (1024, 4096, 16384)
+B = 4
+
+
+def run(reporter=None) -> Reporter:
+    r = reporter or Reporter("fig21_kv_precision_sweep")
+    cfg = get_reduced(ARCH)
+    model = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    toks = jax.random.randint(key, (B, 1), 1, cfg.vocab)
+    base_t = {}
+    for S in SEQS:
+        for fmt in FMTS:
+            policy = get_policy(f"w4a16{fmt}")
+            cache = model.init_cache(policy, B, S)
+            step = jax.jit(lambda p, t, c: model.decode_step(
+                p, policy, t, c, S - 1))
+            t = time_fn(step, params, toks, cache, iters=3)
+            spec = policy.kv
+            kv_bytes = (cfg.n_layers * 2 * B * S * cfg.n_kv_heads *
+                        (cfg.hd * spec.bytes_per_value + 4))
+            if fmt == "kv16":
+                base_t[S] = t
+            r.add(f"{fmt}_S{S}", t, kv_bytes_step=kv_bytes,
+                  speedup_vs_kv16=base_t[S] / t,
+                  byte_saving_vs_kv16=1.0 - kv_bytes /
+                  (cfg.n_layers * 2 * B * S * cfg.n_kv_heads *
+                   (cfg.hd * 2.0 + 4)))
+    return r
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure (DESIGN.md §8).
+
+    PYTHONPATH=src python -m benchmarks.run            # all tables
+    PYTHONPATH=src python -m benchmarks.run --only fig13,table2
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+TABLES = {
+    "fig11": ("benchmarks.kernel_attention", "Fig. 11/12 attention kernel"),
+    "fig13": ("benchmarks.kernel_gemm", "Fig. 13 GEMM vs dense"),
+    "table2": ("benchmarks.gemm_vs_dense", "Table 2 op overhead"),
+    "fig14": ("benchmarks.serving_e2e", "Fig. 14-17 serving e2e"),
+    "fig21": ("benchmarks.kv_precision", "Fig. 18/21 KV precision sweep"),
+    "appE": ("benchmarks.kv_accuracy", "Appendix E KV accuracy"),
+    "fig20": ("benchmarks.ablations", "Fig. 20 internal baselines"),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated table keys (default: all)")
+    args = ap.parse_args(argv)
+    keys = [k.strip() for k in args.only.split(",") if k.strip()] or \
+        list(TABLES)
+    import importlib
+    failures = 0
+    for k in keys:
+        mod_name, desc = TABLES[k]
+        print(f"\n===== {k}: {desc} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.run().print_csv()
+            print(f"[{k} done in {time.perf_counter() - t0:.1f}s]",
+                  flush=True)
+        except Exception:     # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

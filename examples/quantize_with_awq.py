@@ -1,0 +1,92 @@
+"""Offline quantization pipeline: calibrate (AWQ) → quantize → pack →
+evaluate.  The paper serves AWQ/GPTQ checkpoints (§5.1); this example
+produces one end-to-end from a model trained in-repo:
+
+  1. train a reduced model briefly on the synthetic corpus,
+  2. collect calibration activations for the FFN inputs,
+  3. AWQ-search the per-channel scale jointly over w1‖w3 (both consume
+     the same activation), fold 1/s into the preceding RMSNorm gain,
+  4. quantize + hardware-aware-pack the scaled weights (§4.1),
+  5. compare held-out loss: bf16 vs plain RTN-W4 vs AWQ-W4.
+
+    PYTHONPATH=src python examples/quantize_with_awq.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.core import calibration as CAL
+from repro.core import quantize as Q
+from repro.core.packing import pack_prequantized, pack_weight
+from repro.core.precision import get_policy
+from repro.models import common as C
+from repro.models.registry import build
+from repro.training import data as D
+from repro.training.loop import train
+
+cfg = get_reduced("smollm-360m")
+model = build(cfg)
+pol16 = get_policy("w16a16kv16")
+pol4 = get_policy("w4a16kv8")
+
+print("1. training a reduced model (300 steps)…")
+res = train(cfg, n_steps=300, batch=8, seq=48, lr=2e-3, log_every=100)
+params = res["params"]
+# NOTE: a briefly-trained reduced model has little quantization-sensitive
+# structure — the degradation numbers below are small; the AWQ-beats-RTN
+# property is asserted on a salient-channel problem in
+# tests/test_calibration.py.  This example demonstrates the PIPELINE:
+# calibrate → scale-fold → quantize → pack → serve-ready params.
+
+print("2. collecting FFN calibration activations…")
+toks, _ = next(D.batches(cfg.vocab, 8, 48, 1, seed=99))
+h = model.hidden_states(params, toks, policy=pol16)           # (B, S, d)
+# FFN input = rms_norm(x, ln2); approximate with the final hidden states
+# distribution (shares the salient-channel structure)
+x_calib = h.reshape(-1, cfg.d_model).astype(jnp.float32)[:256]
+
+def quantize_ffn(params, use_awq: bool):
+    """Quantize layer-stacked w1/w3 (L, d, f) to W4, optionally AWQ."""
+    new = jax.tree.map(lambda x: x, params)         # shallow copy
+    L = cfg.n_layers
+    w1, w3 = params["layers"]["w1"], params["layers"]["w3"]
+    ln2 = params["layers"]["ln2"]
+    q1s, q3s, lns = [], [], []
+    for l in range(L):
+        a, b = (jnp.asarray(w1[l], jnp.float32),
+                jnp.asarray(w3[l], jnp.float32))
+        if use_awq:
+            s, alpha = CAL.awq_search_scale(
+                jnp.concatenate([a, b], axis=1), x_calib, bits=4, group=64)
+            a, b = a * s[:, None], b * s[:, None]
+            # fold 1/s into the preceding norm gain: rms_norm scales by
+            # (1 + g) → g' = (1 + g)/s − 1
+            lns.append(((1.0 + ln2[l].astype(jnp.float32)) / s - 1.0)
+                       .astype(ln2.dtype))
+        else:
+            lns.append(ln2[l])
+        qa, sa = Q.quantize_weight_grouped(a, bits=4, group=64)
+        qb, sb = Q.quantize_weight_grouped(b, bits=4, group=64)
+        q1s.append(pack_prequantized(qa, sa, bits=4, group=64, block_k=64,
+                                     block_n=128))
+        q3s.append(pack_prequantized(qb, sb, bits=4, group=64, block_k=64,
+                                     block_n=128))
+    stack = lambda ps: jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    new["layers"] = dict(params["layers"])
+    new["layers"]["w1"] = stack(q1s)
+    new["layers"]["w3"] = stack(q3s)
+    new["layers"]["ln2"] = jnp.stack(lns)
+    return new
+
+def held_out_loss(p):
+    toks, tgts = next(D.batches(cfg.vocab, 8, 48, 1, seed=1234))
+    return float(model.loss_fn(p, pol4, toks, tgts))
+
+print("3-5. quantizing + evaluating…")
+loss_bf16 = held_out_loss(params)
+loss_rtn = held_out_loss(quantize_ffn(params, use_awq=False))
+loss_awq = held_out_loss(quantize_ffn(params, use_awq=True))
+print(f"\nheld-out loss  bf16: {loss_bf16:.4f}   RTN-W4: {loss_rtn:.4f}   "
+      f"AWQ-W4: {loss_awq:.4f}")
+print(f"W4 degradation: RTN +{loss_rtn - loss_bf16:.4f}, "
+      f"AWQ +{loss_awq - loss_bf16:.4f}")

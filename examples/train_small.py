@@ -1,0 +1,31 @@
+"""Train a small model for a few hundred steps on the synthetic corpus —
+exercises the full training substrate (data pipeline → model → optimizer →
+checkpoint).  The reduced SmolLM config keeps this CPU-feasible; pass
+--arch/--steps to scale up on real hardware.
+
+    PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+import argparse
+
+from repro.configs import ARCHS, get_reduced
+from repro.training.loop import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="smollm-360m", choices=ARCHS)
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--lr", type=float, default=2e-3)
+ap.add_argument("--checkpoint", default="/tmp/repro_train_small.npz")
+args = ap.parse_args()
+
+cfg = get_reduced(args.arch)
+print(f"training {cfg.name} ({cfg.n_layers}L d={cfg.d_model}) "
+      f"for {args.steps} steps")
+res = train(cfg, n_steps=args.steps, batch=args.batch, seq=args.seq,
+            lr=args.lr, log_every=20, checkpoint_path=args.checkpoint,
+            checkpoint_every=max(50, args.steps // 4))
+first, last = res["losses"][0][1], res["losses"][-1][1]
+print(f"\nloss {first:.3f} → {last:.3f}  "
+      f"({res['tokens_per_s']:.0f} tokens/s on this host)")
+print(f"checkpoint: {args.checkpoint}")

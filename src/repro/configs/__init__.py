@@ -1,0 +1,50 @@
+"""Architecture config registry — one module per assigned architecture.
+
+``get_config(arch_id)`` / ``get_reduced(arch_id)`` resolve the assigned
+ids (dashes) to their config modules; ``ARCHS`` lists all ten.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import ModelConfig
+
+#: assigned architecture ids (public pool), in assignment order
+ARCHS: List[str] = [
+    "arctic-480b",
+    "rwkv6-7b",
+    "llama4-scout-17b-a16e",
+    "whisper-tiny",
+    "chatglm3-6b",
+    "internvl2-2b",
+    "smollm-360m",
+    "gemma3-1b",
+    "mistral-large-123b",
+    "recurrentgemma-2b",
+]
+
+#: the four assigned input shapes: name -> (seq_len, global_batch, kind)
+SHAPES: Dict[str, tuple] = {
+    "train_4k":    (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k":  (32_768, 128, "decode"),
+    "long_500k":   (524_288, 1, "decode"),
+}
+
+
+def _module(arch_id: str):
+    return importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_')}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _module(arch_id).REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,24 @@
+"""Core mixed-precision inference library (the paper's contribution).
+
+Public surface:
+  PrecisionPolicy / get_policy          — WxAyKVz format handling
+  pack_weight / PackedWeight            — offline hardware-aware packing (§4.1)
+  mp_matmul                             — mixed-precision GEMM pipeline (§3.4)
+  KVCache / init_cache / append         — quantized KV cache
+  prefill_attention / decode_attention  — mixed-precision attention pipeline
+"""
+from .precision import PrecisionPolicy, FormatSpec, get_policy, DEFAULT_SERVING
+from .packing import (PackedWeight, pack_weight, unpack_weight,
+                      dequantize_packed, quantize_rowmajor)
+from .gemm import mp_matmul, dense_matmul
+from .kvcache import KVCache, init_cache, cache_spec, append, store_dim
+from .attention import (prefill_attention, decode_attention, cross_attention,
+                        flash_attention)
+
+__all__ = [
+    "PrecisionPolicy", "FormatSpec", "get_policy", "DEFAULT_SERVING",
+    "PackedWeight", "pack_weight", "unpack_weight", "dequantize_packed",
+    "quantize_rowmajor", "mp_matmul", "dense_matmul",
+    "KVCache", "init_cache", "cache_spec", "append", "store_dim",
+    "prefill_attention", "decode_attention", "cross_attention",
+]

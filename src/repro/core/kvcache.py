@@ -1,0 +1,118 @@
+"""Quantized KV cache.
+
+Layout: (batch, seq, kv_heads, head_dim_store) with per-(token, head)
+symmetric scales (batch, seq, kv_heads, 1).  head_dim is the minor (lane)
+axis so dequantization is a lane-aligned broadcast on TPU — the layout half
+of the paper's "adaptive head alignment" (§4.2): the quantized K tiles are
+stored seq-major so the decode kernel walks contiguous (block_s × head_dim)
+VMEM tiles, and Q is the tensor that adapts.
+
+For kv4, head_dim is nibble-packed 2-per-int8 (store dim = head_dim // 2).
+The cache is a plain pytree → works under pjit with the sharding rules in
+launch/sharding.py (heads on "model" when divisible, else sequence-parallel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize as Q
+from .precision import FormatSpec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array          # (B, S, H, Dstore)
+    v: jax.Array          # (B, S, H, Dstore)
+    k_scale: jax.Array    # (B, S, H, 1) f32
+    v_scale: jax.Array    # (B, S, H, 1) f32
+    length: jax.Array     # (B,) int32 — valid prefix length per sequence
+
+    @property
+    def max_seq(self) -> int:
+        return self.k.shape[1]
+
+
+def store_dim(head_dim: int, spec: FormatSpec) -> int:
+    return head_dim // 2 if spec.packed else head_dim
+
+
+def init_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+               spec: FormatSpec) -> KVCache:
+    ds = store_dim(head_dim, spec)
+    shape = (batch, max_seq, kv_heads, ds)
+    return KVCache(
+        k=jnp.zeros(shape, spec.dtype),
+        v=jnp.zeros(shape, spec.dtype),
+        k_scale=jnp.ones((batch, max_seq, kv_heads, 1), jnp.float32),
+        v_scale=jnp.ones((batch, max_seq, kv_heads, 1), jnp.float32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_spec(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+               spec: FormatSpec) -> KVCache:
+    """ShapeDtypeStruct skeleton of the cache (for dry-run input_specs)."""
+    ds = store_dim(head_dim, spec)
+    f = jax.ShapeDtypeStruct
+    shape = (batch, max_seq, kv_heads, ds)
+    return KVCache(
+        k=f(shape, spec.dtype), v=f(shape, spec.dtype),
+        k_scale=f((batch, max_seq, kv_heads, 1), jnp.float32),
+        v_scale=f((batch, max_seq, kv_heads, 1), jnp.float32),
+        length=f((batch,), jnp.int32),
+    )
+
+
+def append(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+           pos: jax.Array, spec: FormatSpec,
+           advance_length: bool = True) -> KVCache:
+    """Quantize and write ``T`` new tokens at position ``pos`` (same for the
+    whole batch — the engine aligns slots; ragged writes use per-slot pos by
+    vmapping this).  k_new/v_new: (B, T, H, D) in compute dtype."""
+    kq, ks = Q.quantize_kv(k_new, spec)
+    vq, vs = Q.quantize_kv(v_new, spec)
+    pos = jnp.asarray(pos, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    upd = lambda buf, val: jax.lax.dynamic_update_slice(buf, val, (z, pos, z, z))
+    return KVCache(
+        k=upd(cache.k, kq), v=upd(cache.v, vq),
+        k_scale=upd(cache.k_scale, ks.astype(jnp.float32)),
+        v_scale=upd(cache.v_scale, vs.astype(jnp.float32)),
+        length=cache.length + (k_new.shape[1] if advance_length else 0),
+    )
+
+
+def append_per_slot(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                    pos: jax.Array, spec: FormatSpec) -> KVCache:
+    """Ragged append: each batch slot writes at its own position.
+
+    k_new/v_new: (B, T, H, D); pos: (B,) int32.  Used by the continuous-
+    batching engine where slots are at different sequence lengths.
+    """
+    kq, ks = Q.quantize_kv(k_new, spec)
+    vq, vs = Q.quantize_kv(v_new, spec)
+
+    def write(buf, val, p):      # buf (S, H, d), val (T, H, d), p scalar
+        return jax.lax.dynamic_update_slice(buf, val, (p, 0, 0))
+
+    w = jax.vmap(write, in_axes=(0, 0, 0))
+    pos = pos.astype(jnp.int32)
+    return KVCache(
+        k=w(cache.k, kq, pos), v=w(cache.v, vq, pos),
+        k_scale=w(cache.k_scale, ks.astype(jnp.float32), pos),
+        v_scale=w(cache.v_scale, vs.astype(jnp.float32), pos),
+        length=cache.length + k_new.shape[1],
+    )
+
+
+def dequant_k(cache: KVCache, spec: FormatSpec, dtype=jnp.bfloat16) -> jax.Array:
+    return Q.dequantize_kv(cache.k, cache.k_scale, spec, dtype)
+
+
+def dequant_v(cache: KVCache, spec: FormatSpec, dtype=jnp.bfloat16) -> jax.Array:
+    return Q.dequantize_kv(cache.v, cache.v_scale, spec, dtype)

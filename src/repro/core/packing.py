@@ -1,0 +1,171 @@
+"""Hardware-aware weight packing (offline stage of the paper's GEMM pipeline).
+
+Paper §4.1: the GPU version runs low-bit weights through the *standard
+high-precision data pipeline* — bit-extend → fragment-load (ldmatrix's
+crossbar redistributes lanes) → bit-compress + permute → coalesced
+fragment-store — so the stored layout is exactly what the hardware's load
+path produces, and online inference reloads with the plain two-instruction
+sequence, with zero runtime swizzle.
+
+TPU adaptation (DESIGN.md §2): there are no warps/banks; the unit the load
+path produces is the **Pallas block** — a (block_k, block_n) VMEM tile whose
+last dim is a multiple of 128 lanes and whose second-minor dim is a multiple
+of the sublane count.  We therefore pack offline into **tile-major** order:
+
+    (K, N) int4/int8  →  tiles[K/bk, N/bn, bk(/2 if int4), bn]
+
+* step (i)  bit extension   — int4 nibbles are unpacked to int8 ("widened")
+* step (ii) fragment loading — the tensor is reshaped through the same
+  (tile grid × tile) view a standard bf16 Pallas GEMM would use; this is the
+  layout the MXU feed path wants, playing the role of ldmatrix's crossbar
+* step (iii) bit compression — inside each tile, nibbles are re-packed
+  2-per-int8 **along the K axis of the tile**, preserving MXU feed order so
+  the in-kernel unpack is a pure VPU shift/and with no permutation
+* step (iv) fragment storing — tiles are stored contiguously (tile-major),
+  so the online BlockSpec ``index_map=(i, j) -> (i, j, 0, 0)`` reads one
+  contiguous HBM region per grid step: the DMA analogue of a single fully
+  coalesced cache-line store/load.
+
+Scales are laid out per (K-group, N-tile) so that inside a block the scale
+vector broadcasts across lanes without re-layout.
+
+This addresses Challenges I, II and V structurally: contiguous DMA
+(coalescing), aligned tiles (no bank-conflict analogue / no relayout), and
+MXU-shaped operands (no MMA misalignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize as Q
+
+# Default Pallas GEMM tile.  bn=128 matches the MXU lane width; bk=128
+# matches the weight-group size so one tile row covers exactly one scale
+# group (scale application needs no intra-tile group boundary handling).
+DEFAULT_BLOCK_K = 128
+DEFAULT_BLOCK_N = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedWeight:
+    """Offline-packed quantized weight + metadata.
+
+    data   : (Kt, Nt, bk_store, bn) int8 — tile-major; bk_store = bk/2 for
+             int4 (two nibbles per byte along K), bk for int8.
+    scales : (K//group, N) f32 per-group scales.
+    """
+
+    data: jax.Array
+    scales: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group: int = dataclasses.field(metadata=dict(static=True))
+    block_k: int = dataclasses.field(metadata=dict(static=True))
+    block_n: int = dataclasses.field(metadata=dict(static=True))
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def storage_bytes(self) -> int:
+        return self.data.size + self.scales.size * self.scales.dtype.itemsize
+
+
+def _tile(q: jax.Array, bk: int, bn: int) -> jax.Array:
+    """(K, N) → (Kt, Nt, bk, bn) tile-major — paper step (ii)."""
+    K, N = q.shape
+    return q.reshape(K // bk, bk, N // bn, bn).transpose(0, 2, 1, 3)
+
+
+def _untile(t: jax.Array, K: int, N: int) -> jax.Array:
+    Kt, Nt, bk, bn = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(K, N)
+
+
+@partial(jax.jit, static_argnames=("bits", "group", "block_k", "block_n"))
+def pack_weight(
+    w: jax.Array,
+    bits: int = 4,
+    group: int = 128,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> PackedWeight:
+    """Offline hardware-aware packing of a (K, N) weight matrix.
+
+    Fully offline (paper: "performed entirely offline") — jit'd for speed
+    but never on the serving hot path.
+    """
+    K, N = w.shape
+    assert K % block_k == 0 and N % block_n == 0, (K, N, block_k, block_n)
+    assert block_k % group == 0 or group % block_k == 0
+    # quantize per-(group, column)
+    q, scales = Q.quantize_weight_grouped(w, bits=bits, group=group)
+    # steps (i)+(ii): values are already "wide" int8 here; view through the
+    # standard tile pipeline.
+    tiles = _tile(q, block_k, block_n)                # (Kt, Nt, bk, bn)
+    if bits == 4:
+        # step (iii): re-pack nibbles along the tile-local K axis.
+        tiles = Q.pack_int4(tiles, axis=2)            # (Kt, Nt, bk/2, bn)
+    # step (iv): tiles are contiguous in this layout by construction.
+    return PackedWeight(data=tiles, scales=scales, bits=bits, group=group,
+                        block_k=block_k, block_n=block_n, shape=(K, N))
+
+
+def pack_prequantized(q: jax.Array, scales: jax.Array, bits: int,
+                      group: int = 128,
+                      block_k: int = DEFAULT_BLOCK_K,
+                      block_n: int = DEFAULT_BLOCK_N) -> PackedWeight:
+    """Pack already-quantized int values (e.g. from AWQ/GPTQ calibration)."""
+    K, N = q.shape
+    tiles = _tile(q, block_k, block_n)
+    if bits == 4:
+        tiles = Q.pack_int4(tiles, axis=2)
+    return PackedWeight(data=tiles, scales=scales, bits=bits, group=group,
+                        block_k=block_k, block_n=block_n, shape=(K, N))
+
+
+def unpack_weight(p: PackedWeight) -> jax.Array:
+    """Inverse permutation → (K, N) int8-held values.  Used by the XLA
+    (non-Pallas) compute path and by tests to prove packing is a pure,
+    lossless permutation."""
+    t = p.data
+    if p.bits == 4:
+        t = Q.unpack_int4(t, axis=2)
+    return _untile(t, *p.shape)
+
+
+def dequantize_packed(p: PackedWeight, dtype=jnp.bfloat16) -> jax.Array:
+    return Q.dequantize_weight_grouped(unpack_weight(p), p.scales,
+                                       group=p.group, dtype=dtype)
+
+
+# -- the *unpacked* baseline layout (MARLIN-without-repack analogue) ----------
+# Stored row-major exactly as the quantizer emits it; the online kernel must
+# do the re-layout itself.  Kept for benchmarks/ablations.py.
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class UnpackedWeight:
+    data: jax.Array          # (K(/2 if int4), N) int8, row-major
+    scales: jax.Array        # (K//group, N)
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group: int = dataclasses.field(metadata=dict(static=True))
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+
+def quantize_rowmajor(w: jax.Array, bits: int = 4, group: int = 128) -> UnpackedWeight:
+    q, scales = Q.quantize_weight_grouped(w, bits=bits, group=group)
+    if bits == 4:
+        q = Q.pack_int4(q, axis=0)
+    return UnpackedWeight(data=q, scales=scales, bits=bits, group=group,
+                          shape=tuple(w.shape))
+
+
+def unpack_rowmajor(u: UnpackedWeight) -> jax.Array:
+    q = u.data
+    if u.bits == 4:
+        q = Q.unpack_int4(q, axis=0)
+    return q

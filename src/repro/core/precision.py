@@ -1,0 +1,138 @@
+"""Precision policy: parse and represent WxAyKVz mixed-precision formats.
+
+The paper denotes mixed-precision formats as "WxAyKVz" — x-bit weights,
+y-bit activations, z-bit KV cache (footnote 1).  TurboMind's contribution is
+*holistic* support for arbitrary combinations (unlike QServe's hard-wired
+W4A8KV4 or MARLIN's GEMM-only W4A16).  This module is the single source of
+truth for which formats exist and what dtypes/packing they imply on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import jax.numpy as jnp
+import ml_dtypes
+
+# ---------------------------------------------------------------------------
+# Format atoms
+# ---------------------------------------------------------------------------
+
+#: storage dtype, bits, packed (2 values / int8 container along the quantized
+#: axis), is_float
+_WEIGHT_FORMATS = {
+    "w4":   dict(dtype=jnp.int8, bits=4, packed=True, is_float=False),
+    "w8":   dict(dtype=jnp.int8, bits=8, packed=False, is_float=False),
+    "wfp8": dict(dtype=jnp.float8_e4m3fn, bits=8, packed=False, is_float=True),
+    "w16":  dict(dtype=jnp.bfloat16, bits=16, packed=False, is_float=True),
+}
+
+_ACT_FORMATS = {
+    "a8":   dict(dtype=jnp.int8, bits=8, packed=False, is_float=False),
+    "afp8": dict(dtype=jnp.float8_e4m3fn, bits=8, packed=False, is_float=True),
+    "a16":  dict(dtype=jnp.bfloat16, bits=16, packed=False, is_float=True),
+}
+
+_KV_FORMATS = {
+    "kv4":   dict(dtype=jnp.int8, bits=4, packed=True, is_float=False),
+    "kv8":   dict(dtype=jnp.int8, bits=8, packed=False, is_float=False),
+    "kvfp8": dict(dtype=jnp.float8_e5m2, bits=8, packed=False, is_float=True),
+    "kv16":  dict(dtype=jnp.bfloat16, bits=16, packed=False, is_float=True),
+}
+
+_POLICY_RE = re.compile(r"^(w4|w8|wfp8|w16)(a8|afp8|a16)(kv4|kv8|kvfp8|kv16)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """One precision atom (weights, activations or KV)."""
+
+    name: str
+    dtype: jnp.dtype
+    bits: int
+    packed: bool      # two 4-bit values per int8 container
+    is_float: bool
+
+    @property
+    def bytes_per_value(self) -> float:
+        return self.bits / 8.0
+
+    @property
+    def qmax(self) -> float:
+        """Max representable magnitude for symmetric integer quant."""
+        if self.is_float:
+            return float(ml_dtypes.finfo(self.dtype).max)
+        return float(2 ** (self.bits - 1) - 1)
+
+
+def _spec(table, name) -> FormatSpec:
+    return FormatSpec(name=name, **table[name])
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """A full WxAyKVz policy, e.g. ``PrecisionPolicy.parse("w4a16kv8")``.
+
+    ``compute_dtype`` is always bf16 on TPU: the MXU has bf16×bf16 and
+    s8×s8→s32 modes only; fp16 (paper) maps to bf16 and fp8 storage is
+    dequantized to bf16 before the MXU (v5e has no fp8 matmul mode —
+    recorded as a hardware-adaptation divergence in DESIGN.md §2).
+    """
+
+    weights: FormatSpec
+    acts: FormatSpec
+    kv: FormatSpec
+    weight_group: int = 128     # per-group quant granularity along K
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    @classmethod
+    def parse(cls, fmt: str, *, weight_group: int = 128) -> "PrecisionPolicy":
+        m = _POLICY_RE.match(fmt.lower().strip())
+        if not m:
+            raise ValueError(
+                f"Bad precision format {fmt!r}; expected WxAyKVz, e.g. w4a16kv8 "
+                f"with w∈{sorted(_WEIGHT_FORMATS)}, a∈{sorted(_ACT_FORMATS)}, "
+                f"kv∈{sorted(_KV_FORMATS)}")
+        w, a, kv = m.groups()
+        return cls(weights=_spec(_WEIGHT_FORMATS, w),
+                   acts=_spec(_ACT_FORMATS, a),
+                   kv=_spec(_KV_FORMATS, kv),
+                   weight_group=weight_group)
+
+    @property
+    def name(self) -> str:
+        return f"{self.weights.name}{self.acts.name}{self.kv.name}"
+
+    @property
+    def int8_matmul(self) -> bool:
+        """Integer-weight × A8 uses the MXU's native s8×s8→s32 path.
+
+        W4 values live in int8 containers and are valid s8 operands after
+        the nibble unpack — QServe's W4A8 trick maps to the same MXU mode
+        (per-group rescale applied to the s32 accumulator)."""
+        return (not self.weights.is_float and self.weights.bits <= 8
+                and not self.acts.is_float and self.acts.bits == 8)
+
+    def weight_bytes(self, n_params: int) -> int:
+        """Storage bytes for n quantized weight params (excl. scales)."""
+        return int(n_params * self.weights.bytes_per_value)
+
+
+# Paper-faithful default serving format (headline format, §5.2 W4A16KV8).
+DEFAULT_SERVING = "w4a16kv8"
+# Training is always full bf16 — the paper is inference-only.
+TRAINING = "w16a16kv16"
+
+_ALIASES = {
+    "default": DEFAULT_SERVING,
+    "training": TRAINING,
+    "qserve": "w4a8kv4",        # the format QServe is hard-wired to (§1)
+    "turbomind-optimal": "w4a16kv4",  # LMDeploy's optimal variant in Fig.20
+}
+
+
+def get_policy(fmt: Optional[str] = None, **kw) -> PrecisionPolicy:
+    fmt = fmt or DEFAULT_SERVING
+    fmt = _ALIASES.get(fmt, fmt)
+    return PrecisionPolicy.parse(fmt, **kw)

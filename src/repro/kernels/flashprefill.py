@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused causal flash attention for prefill.
+
+§Perf hillclimb (beyond-paper): the XLA-lowered prefill attention
+materializes every (bq × bk) score tile in HBM between the QKᵀ dot and
+the PV dot — the dominant memory-roofline term at 32k context.  This
+kernel keeps scores, softmax state and the output accumulator in VMEM
+scratch across the KV-block grid dimension, so HBM traffic collapses to
+the q/k/v/o tiles themselves (flash-attention's IO bound).
+
+Grid: (B, H, nq, nk) with nk innermost — pallas pipelines the next KV
+tile's HBM→VMEM DMA under the current tile's MXU work (same triple
+overlap as the decode kernel / paper §4.4).  Causal blocks above the
+diagonal are skipped via @pl.when (no MXU work; the DMA cost of skipped
+tiles is accepted — on the triangle that's < 2× fetch overhead and only
+for the strictly-upper blocks).
+
+VMEM per step at bq=bk=512, D=128: q 512·128·2 + k/v 2·512·128·2 +
+scores 512·512·4 (f32, scratch) + acc 512·128·4 ≈ 1.9 MiB — fits with
+double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq, bk, nk, d, seq, window, causal):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: block needed iff any kpos <= max qpos of the block
+    needed = (kj * bk <= qi * bq + bq - 1) if causal else True
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0]                                  # (bq, D)
+        k = k_ref[0, 0]                                  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s *= jax.lax.rsqrt(jnp.float32(d))
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > (qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kj == nk - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret", "seq"))
+def flash_prefill(
+    q: jax.Array,           # (B, H, S, D) — head-major (wrapper transposes)
+    k: jax.Array,           # (B, Hkv, S, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    block_q: int = 512,
+    block_k: int = 512,
+    seq: int = 0,           # true (unpadded) length; 0 → S
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, d=D, seq=seq or S,
+        window=window if isinstance(window, int) else None, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: decode attention over a quantized KV cache.
+
+The paper's attention pipeline (§3.4) with adaptive head alignment (§4.2)
+and the KV memory loading pipeline (§4.4), TPU-native:
+
+* **Adaptive head alignment**: Q is the tensor that adapts — the wrapper
+  reshapes it once per decode step into (B, Hkv, rep, D) so each grid step
+  holds the `rep` grouped-query heads that share one quantized K/V head,
+  and the dot contracts against the low-bit K tile's cast directly.  K/V
+  are never materialized in bf16 in HBM.
+* **KV memory loading pipeline**: grid dimension 2 walks (block_s × D) KV
+  tiles; ``pallas_call`` pipelines the next tile's HBM→VMEM DMA under the
+  current tile's dequant (VPU) + QKᵀ/PV (MXU) — the triple overlap of
+  Fig. 10.  Online-softmax state (m, l, acc) lives in VMEM scratch across
+  grid steps, flash-decoding style.
+* Dequantization is nibble-unpack + I2F + per-(token, head) scale — scale
+  is applied to the score/prob matrices (algebraic hoisting), so the MXU
+  operands are plain casts of the stored integers.
+
+VMEM per step at block_s=256, D=128, rep≤16: k/v tiles 2·256·128 B int8 +
+q 16·128·2 B + scratch (16·128·4 + 2·16·4) ≈ 90 KiB — double-buffered
+comfortably within VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dequant_tile(q_ints: jax.Array, scale: jax.Array, packed: bool,
+                  d: int) -> jax.Array:
+    """(bs, Dstore) ints + (bs,) scales → (bs, d) bf16."""
+    if packed:
+        lo = ((q_ints << 4).astype(jnp.int8) >> 4)
+        hi = (q_ints >> 4).astype(jnp.int8)
+        q_ints = jnp.stack([lo, hi], axis=2).reshape(q_ints.shape[0], d)
+    return (q_ints.astype(jnp.float32) * scale[:, None]).astype(jnp.bfloat16)
+
+
+def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, block_s, n_s, d, packed,
+                   window, kv_is_float):
+    s_blk = pl.program_id(2)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0, 0]
+    q = q_ref[0, 0]                                     # (rep, D) bf16
+    kt = k_ref[0, :, 0]                                 # (bs, Dstore)
+    ks = ks_ref[0, :, 0]                                # (bs,)
+    if kv_is_float:
+        kd = (kt.astype(jnp.float32) * ks[:, None]).astype(jnp.bfloat16)
+    else:
+        kd = _dequant_tile(kt, ks, packed, d)           # (bs, D) bf16
+
+    s = jax.lax.dot_general(q, kd, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s *= jax.lax.rsqrt(jnp.float32(d))                  # (rep, bs)
+
+    idx = s_blk * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = idx <= pos
+    if window is not None:
+        mask &= idx > (pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)                         # kill fully-masked rows
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+
+    vt = v_ref[0, :, 0]
+    vs = vs_ref[0, :, 0]
+    if kv_is_float:
+        vd = (vt.astype(jnp.float32) * vs[:, None]).astype(jnp.bfloat16)
+    else:
+        vd = _dequant_tile(vt, vs, packed, d)           # (bs, D)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(jnp.bfloat16), vd, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(s_blk == n_s - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("packed", "kv_is_float", "block_s", "window",
+                     "interpret"))
+def kvattn_decode_grouped(
+    q: jax.Array,          # (B, Hkv, rep, D) bf16 — adaptive head alignment
+    k: jax.Array,          # (B, S, Hkv, Dstore) int8 / fp8 / bf16
+    k_scale: jax.Array,    # (B, S, Hkv) f32
+    v: jax.Array,
+    v_scale: jax.Array,
+    pos: jax.Array,        # (1, 1) int32: index of the newest token
+    *,
+    packed: bool,
+    kv_is_float: bool = False,
+    block_s: int = 256,
+    window=None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, rep, D = q.shape
+    S = k.shape[1]
+    Ds = k.shape[3]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_s = S // bs
+
+    grid = (B, Hkv, n_s)
+    kernel = functools.partial(
+        _kvattn_kernel, block_s=bs, n_s=n_s, d=D, packed=packed,
+        window=window, kv_is_float=kv_is_float)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, Ds), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
+            pl.BlockSpec((1, bs, 1, Ds), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
+            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, k_scale, v, v_scale, pos)

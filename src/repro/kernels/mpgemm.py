@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: mixed-precision GEMM over offline-packed weights.
+
+The online half of the paper's GEMM pipeline (§3.4/§4.3), TPU-native:
+
+* Weights arrive in the tile-major layout produced by
+  ``core.packing.pack_weight`` — each grid step's BlockSpec reads ONE
+  contiguous (bk_store × bn) int8 tile from HBM (the coalesced-load
+  guarantee of hardware-aware packing).
+* In-kernel dequantization = nibble unpack (VPU shift/and) + I2F cast +
+  per-group scale broadcast — no permutation, because the offline packer
+  already stored sub-words in MXU feed order (paper Fig. 6).
+* Parallel MMA–dequantization (§4.3): ``pl.pallas_call`` software-pipelines
+  the grid — while the MXU contracts block k, the next block's HBM→VMEM DMA
+  is in flight, and the VPU dequant of block k overlaps the MXU issue
+  stream.  This is the TPU's structural equivalent of the paper's
+  three-way (tensor core ∥ ALU ∥ cp.async) overlap.
+
+Tiling: block_n = 128 (MXU lane width), block_k = 128 (= quant group, so a
+tile row spans exactly one scale group), block_m adaptive in the wrapper.
+VMEM working set per step: bm·bk·2 (x) + bk/2·bn (w) + bn·4 (scale) +
+bm·bn·4 (acc) ≈ 98 KiB at bm=128 — far under the ~16 MiB VMEM budget,
+leaving room for the pipeline's double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_nibbles_tile(wp: jax.Array, bk: int, bn: int) -> jax.Array:
+    """(bk//2, bn) int8 containers → (bk, bn) int8 values.
+
+    Matches core.quantize.unpack_int4 ordering: low nibble = even k index.
+    Pure VPU ops (shift / arithmetic shift), no gathers.
+    """
+    lo = ((wp << 4).astype(jnp.int8) >> 4)
+    hi = (wp >> 4).astype(jnp.int8)
+    return jnp.stack([lo, hi], axis=1).reshape(bk, bn)
+
+
+def _mpgemm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits, bk, bn,
+                   n_k, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    wp = w_ref[0, 0]                                   # (bk_store, bn) int8
+    if bits == 4:
+        wv = _unpack_nibbles_tile(wp, bk, bn)          # (bk, bn) int8
+    else:
+        wv = wp
+    # I2F + scale: the dequantized fragment feeds the MXU directly.
+    scale = s_ref[...].astype(jnp.float32)             # (1, bn)
+    wd = (wv.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+    acc_ref[...] += jnp.dot(x_ref[...], wd,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _mpgemm_int8_kernel(x_ref, xs_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                        bits, bk, bn, n_k, out_dtype):
+    """W4A8/W8A8 mainloop: MXU s8×s8→s32 dot, per-group weight scale
+    applied to each K-block's s32 partial product (block_k == group), the
+    per-token activation scale at the final store — QServe's W4A8 compute
+    mapped to the TPU's native int8 matmul mode."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    wp = w_ref[0, 0]
+    wv = _unpack_nibbles_tile(wp, bk, bn) if bits == 4 else wp
+    part = jax.lax.dot_general(x_ref[...], wv, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    acc_ref[...] += part.astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] *
+                      xs_ref[...].astype(jnp.float32)).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group", "block_m", "interpret", "out_dtype"))
+def mpgemm_int8_2d(
+    xq: jax.Array,           # (M, K) int8 — per-token quantized activations
+    xscale: jax.Array,       # (M, 1) f32
+    w_tiles: jax.Array,      # (Kt, Nt, bk_store, bn) int8 tile-major
+    scales: jax.Array,       # (K // group, N) f32
+    *,
+    bits: int,
+    group: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    M, K = xq.shape
+    Kt, Nt, bk_store, bn = w_tiles.shape
+    bk = bk_store * 2 if bits == 4 else bk_store
+    N = Nt * bn
+    assert Kt * bk == K and group == bk, (K, Kt, bk, group)
+    bm = min(block_m, M)
+    assert M % bm == 0, (M, bm)
+    grid = (M // bm, Nt, Kt)
+    kernel = functools.partial(_mpgemm_int8_kernel, bits=bits, bk=bk, bn=bn,
+                               n_k=Kt, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, 1, bk_store, bn), lambda i, j, k: (k, j, 0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xq, xscale, w_tiles, scales)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group", "block_m", "interpret", "out_dtype"))
+def mpgemm_2d(
+    x: jax.Array,            # (M, K) bf16
+    w_tiles: jax.Array,      # (Kt, Nt, bk_store, bn) int8 (tile-major packed)
+    scales: jax.Array,       # (K // group, N) f32
+    *,
+    bits: int,
+    group: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    M, K = x.shape
+    Kt, Nt, bk_store, bn = w_tiles.shape
+    bk = bk_store * 2 if bits == 4 else bk_store
+    N = Nt * bn
+    assert Kt * bk == K, (K, Kt, bk)
+    assert group == bk, "kernel requires quant group == block_k (packer default)"
+    bm = min(block_m, M)
+    assert M % bm == 0, (M, bm)
+
+    grid = (M // bm, Nt, Kt)
+    kernel = functools.partial(_mpgemm_kernel, bits=bits, bk=bk, bn=bn,
+                               n_k=Kt, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, 1, bk_store, bn), lambda i, j, k: (k, j, 0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_tiles, scales)

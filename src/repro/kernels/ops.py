@@ -1,0 +1,101 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``INTERPRET`` is True on CPU hosts (kernel bodies execute in Python via the
+Pallas interpreter — bit-exact semantics, no TPU required) and False on
+real TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvcache import KVCache
+from repro.core.packing import PackedWeight
+from repro.core.precision import FormatSpec, PrecisionPolicy
+
+from . import kvattn as _kvattn
+from . import mpgemm as _mpgemm
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def mpgemm(x: jax.Array, w: PackedWeight, policy: PrecisionPolicy,
+           block_m: int = 128) -> jax.Array:
+    """y = x @ W with in-kernel dequant.  x: (..., K) → (..., N).
+
+    A16 → bf16 mainloop with I2F dequant; A8 → the MXU s8×s8→s32 mainloop
+    (per-token activation quantization happens here, outside the kernel).
+    """
+    K, N = w.shape
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    bm = block_m
+    while M % bm and bm > 8:
+        bm //= 2
+    if M % bm:
+        bm = 1
+    if policy.int8_matmul:
+        from repro.core import quantize as Q
+        xq, xs = Q.quantize_act_per_token(
+            x.reshape(M, K).astype(jnp.float32), bits=8)
+        y = _mpgemm.mpgemm_int8_2d(
+            xq, xs.astype(jnp.float32), w.data,
+            w.scales.astype(jnp.float32), bits=w.bits, group=w.group,
+            block_m=bm, interpret=INTERPRET,
+            out_dtype=policy.compute_dtype)
+        return y.reshape(*lead, N)
+    x2 = x.reshape(M, K).astype(policy.compute_dtype)
+    y = _mpgemm.mpgemm_2d(x2, w.data, w.scales.astype(jnp.float32),
+                          bits=w.bits, group=w.group, block_m=bm,
+                          interpret=INTERPRET,
+                          out_dtype=policy.compute_dtype)
+    return y.reshape(*lead, N)
+
+
+def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            causal: bool = True, window=None,
+                            block_q: int = 512,
+                            block_k: int = 512) -> jax.Array:
+    """Fused flash prefill.  q: (B, S, H, D); k/v: (B, S, Hkv, D).
+
+    Pads S to a block multiple; the kernel masks padded keys."""
+    from . import flashprefill as _fp
+    B, S, H, D = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    blk = max(bq, bk)
+    Sp = -(-S // blk) * blk                    # pad to a block multiple
+    if Sp != S:
+        padw = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, padw), jnp.pad(k, padw), jnp.pad(v, padw)
+    qp, kp, vp = q, k, v
+    block_q, block_k = bq, bk
+    out = _fp.flash_prefill(
+        qp.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+        kp.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+        vp.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+        causal=causal, window=window if isinstance(window, int) else None,
+        block_q=block_q, block_k=block_k, seq=S, interpret=INTERPRET)
+    return out.transpose(0, 2, 1, 3)[:, :S].astype(q.dtype)
+
+
+def kvattn_decode(q: jax.Array, cache: KVCache, spec: FormatSpec,
+                  pos, window: Optional[int] = None,
+                  block_s: int = 256) -> jax.Array:
+    """Decode attention for one new token.  q: (B, 1, H, D)."""
+    B, T, H, D = q.shape
+    assert T == 1, "pallas decode kernel is single-token (use prefill path)"
+    Hkv = cache.k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, D)          # adaptive head alignment (§4.2)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    out = _kvattn.kvattn_decode_grouped(
+        qg.astype(jnp.bfloat16),
+        cache.k, cache.k_scale[..., 0], cache.v, cache.v_scale[..., 0],
+        pos_arr, packed=spec.packed, kv_is_float=spec.is_float,
+        block_s=block_s, window=window, interpret=INTERPRET)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These share the exact quantization math in ``repro.core`` so kernel tests
+assert Pallas(interpret=True) ≡ reference to float tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+from repro.core.packing import PackedWeight, dequantize_packed
+from repro.core.kvcache import KVCache
+from repro.core.precision import FormatSpec
+
+
+def mpgemm_ref(x: jax.Array, w: PackedWeight,
+               out_dtype=jnp.bfloat16) -> jax.Array:
+    """Oracle for kernels.mpgemm: dequantize-then-matmul in f32."""
+    wd = dequantize_packed(w, dtype=jnp.float32)
+    y = x.astype(jnp.float32) @ wd
+    return y.astype(out_dtype)
+
+
+def flash_prefill_ref(q, k, v, causal=True, window=None):
+    """Oracle for kernels.flashprefill: full f32 attention.
+
+    q: (B, S, H, D); k/v: (B, S, Hkv, D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qf = q.reshape(B, S, Hkv, rep, D).astype(jnp.float32)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k.astype(jnp.float32))
+    scores /= jnp.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = (kpos <= qpos) if causal else jnp.ones((S, S), bool)
+    if window is not None:
+        mask &= kpos > (qpos - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def kvattn_ref(q: jax.Array, cache: KVCache, spec: FormatSpec,
+               pos, window=None) -> jax.Array:
+    """Oracle for kernels.kvattn: full-precision flash-free attention.
+
+    q: (B, T, H, D); returns (B, T, H, D).
+    """
+    B, T, H, D = q.shape
+    Hkv = cache.k.shape[2]
+    rep = H // Hkv
+    kd = Q.dequantize_kv(cache.k, cache.k_scale, spec, jnp.float32)
+    vd = Q.dequantize_kv(cache.v, cache.v_scale, spec, jnp.float32)
+    S = kd.shape[1]
+    scores = jnp.einsum("bthrd,bshd->bhrts",
+                        q.reshape(B, T, Hkv, rep, D).astype(jnp.float32), kd)
+    scores /= jnp.sqrt(D)
+    qpos = jnp.asarray(pos) + jnp.arange(T)
+    kpos = jnp.arange(S)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrts,bshd->bthrd", probs, vd)
+    return out.reshape(B, T, H, D).astype(q.dtype)

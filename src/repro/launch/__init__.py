@@ -1,0 +1,1 @@
+from .mesh import make_production_mesh, data_axes, axis_size  # noqa: F401

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (not a module-level constant) so importing this
+module never touches jax device state — the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init and
+only then calls this.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """v5e pod mesh: 16×16 = 256 chips ("data", "model"); multi-pod adds a
+    leading 2-pod axis (2, 16, 16) ("pod", "data", "model") — "pod" acts as
+    an outer data/FSDP axis (DCN-connected)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The batch/FSDP axes of a production mesh (everything except model)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh: jax.sharding.Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,56 @@
+"""Sequence-parallel prefill attention (shard_map) — §Perf hillclimb.
+
+For architectures whose head counts don't divide the model axis (arctic
+H=56/Hkv=8 on 16-way TP), neither head-sharding (illegal) nor replication
+(measured: ×16 attention compute, cache replication, >HBM) works.  The
+TPU-native answer is to shard the SEQUENCE over the model axis:
+
+* q/k/v enter S-sharded on "model" (B stays on the data axes),
+* each device all-gathers K/V (ring cost: Hkv·D wide — the GQA-narrow
+  tensors, 15/16 × ~270 MB/layer for arctic) and runs flash attention for
+  its local q rows with the right absolute-position offset,
+* output stays S-sharded, so the KV cache (already sequence-parallel on
+  "model") and the following FFN see their natural layouts.
+
+Causal load imbalance across ranks (rank 0 attends 1/16th as much as
+rank 15) is a known property of sequence-parallel causal attention; the
+zig-zag permutation fix is noted in DESIGN.md as future work.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import attention as A
+
+from .mesh import data_axes
+
+
+def build_sp_prefill(mesh: Mesh, q_chunk: int = 512, kv_chunk: int = 512):
+    """Returns fn(q, k, v, causal, window) -> out or None (fallback)."""
+    dp = data_axes(mesh)
+    n_model = mesh.shape["model"]
+
+    def fn(q, k, v, causal=True, window=None):
+        B, S, H, D = q.shape
+        if not causal or S % n_model or k.shape[1] != S:
+            return None
+        spec = P(dp, "model", None, None)
+
+        def local(qc, kc, vc):
+            i = jax.lax.axis_index("model")
+            kf = jax.lax.all_gather(kc, "model", axis=1, tiled=True)
+            vf = jax.lax.all_gather(vc, "model", axis=1, tiled=True)
+            off = i * qc.shape[1]
+            return A.flash_attention(qc, kf, vf, causal=True, window=window,
+                                     pos_offset=off, q_chunk=q_chunk,
+                                     kv_chunk=kv_chunk)
+
+        return shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_rep=False)(q, k, v)
+
+    return fn

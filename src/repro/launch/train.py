@@ -1,0 +1,100 @@
+"""Distributed training driver: pjit train_step on the production mesh.
+
+On a real TPU pod this runs with the physical mesh; on this CPU host it
+runs with whatever devices exist (``--devices N`` forces N host devices
+for local testing — the full 512-device configuration is exercised
+compile-only by dryrun.py).
+
+Usage:
+    python -m repro.launch.train --arch smollm-360m --steps 100 \
+        --batch 8 --seq 128 --devices 4 --reduced
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced config (CPU-feasible)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (testing); 0 = physical")
+    ap.add_argument("--mesh", default="", help='e.g. "2,2" = data×model')
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_reduced
+    from repro.models.registry import build
+    from repro.training import data as D
+    from repro.training import optimizer as O
+    from repro.training.loop import make_train_step
+    from repro.launch.sharding import ShardingRules
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build(cfg)
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+    else:
+        dm = max(1, n_dev // 2) if n_dev > 1 else 1
+        shape = (n_dev // dm, dm) if n_dev > 1 else (1, 1)
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"arch {cfg.name}")
+
+    rules = ShardingRules(mesh, cfg)
+    key = jax.random.PRNGKey(0)
+    opt = O.for_config(cfg, lr=args.lr, total_steps=args.steps)
+    with mesh:
+        params = jax.jit(
+            model.init_params,
+            out_shardings=rules.params(
+                jax.eval_shape(model.init_params, key)))(key)
+        opt_state = jax.jit(
+            opt.init,
+            out_shardings=rules.opt_state(
+                params, jax.eval_shape(opt.init, params)))(params)
+
+        step_raw = make_train_step(model, opt, remat=args.remat)
+
+        def step_fn(p, o, t, g, extra):
+            return step_raw(p, o, t, g, **extra)
+
+        extra = model.extra_inputs(jax.random.fold_in(key, 7), args.batch)
+        step = jax.jit(step_fn)
+        import time
+        t0 = time.perf_counter()
+        for i, (toks, tgts) in enumerate(D.batches(
+                cfg.vocab, args.batch, args.seq, args.steps)):
+            params, opt_state, loss = step(params, opt_state, toks, tgts,
+                                           extra)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:5d}  loss {float(loss):.4f}", flush=True)
+        dt = time.perf_counter() - t0
+        print(f"done: {args.steps} steps, "
+              f"{args.steps * args.batch * args.seq / dt:.0f} tokens/s")
+    if args.checkpoint:
+        from repro.training import checkpoint as CKPT
+        CKPT.save(args.checkpoint, {"params": params, "opt": opt_state},
+                  step=args.steps)
+        print("checkpoint:", args.checkpoint)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,212 @@
+"""Shared model building blocks: norms, RoPE, MLPs, linear application that
+is transparent over quantized (PackedWeight) vs dense (bf16) weights.
+
+All modules are plain functions over explicit param pytrees (no framework),
+jit/pjit/scan friendly.  Initializers return bf16.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import mp_matmul
+from repro.core.packing import PackedWeight, pack_weight
+from repro.core.precision import PrecisionPolicy
+
+Params = Dict[str, Any]
+
+# Optional activation-sharding hook (§Perf): launch code installs a
+# with_sharding_constraint pinning the HEAD axis of (B, S, H, dh)
+# tensors to the model axis — GSPMD loses the propagated head sharding
+# through the recurrent-scan reshape/cast chains otherwise (measured:
+# per-layer full-activation all-gathers in rwkv train).
+_HEAD_CONSTRAINT = None
+
+
+def set_head_constraint(fn) -> None:
+    global _HEAD_CONSTRAINT
+    _HEAD_CONSTRAINT = fn
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh) — apply the installed head-axis constraint."""
+    if _HEAD_CONSTRAINT is None:
+        return x
+    return _HEAD_CONSTRAINT(x)
+
+
+# ---------------------------------------------------------------------------
+# Linear application — quantization-transparent
+# ---------------------------------------------------------------------------
+
+
+def linear(x: jax.Array, w, policy: Optional[PrecisionPolicy] = None,
+           impl: str = "xla") -> jax.Array:
+    """x @ w where w is a raw bf16 array OR a PackedWeight."""
+    if isinstance(w, PackedWeight):
+        assert policy is not None
+        return mp_matmul(x, w, policy, impl=impl)
+    return jnp.dot(x, w.astype(x.dtype))
+
+
+#: production model-axis width (v5e 16×16 pod) — tile counts that divide
+#: this shard cleanly under TP; pick_blocks prefers such block sizes.
+MODEL_AXIS = 16
+
+
+def pick_blocks(K: int, N: int):
+    """MXU-friendly tile dims dividing (K, N) — hardware-aware packing
+    adapts its tile to the matrix (the §4.1 auto-tuning claim, one level
+    up: the packing granularity is the Pallas block).
+
+    Preference order: (i) block sizes whose tile count divides the
+    production model axis (so the packed weight shards cleanly under TP),
+    (ii) largest block dividing the dim.  Blocks stay ≥64 on the lane axis
+    (MXU efficiency) and ≥32 on the sublane axis."""
+    def pick(dim, candidates):
+        best = None
+        for b in candidates:
+            if dim % b == 0:
+                if best is None:
+                    best = b
+                if (dim // b) % MODEL_AXIS == 0:
+                    return b
+        return best
+
+    return pick(K, (128, 64, 32)), pick(N, (128, 96, 64))
+
+
+def maybe_quantize(w: jax.Array, policy: PrecisionPolicy,
+                   min_size: int = 256 * 256):
+    """Quantize+pack a 2D (or stacked (L, K, N) / (L, E, K, N)) weight if it
+    is large enough and tileable; small/odd weights stay bf16 (standard
+    practice — embeddings, norms, tiny LoRA mats are kept high-precision)."""
+    if policy.weights.bits == 16:
+        return w
+    if w.ndim < 2:
+        return w
+    K, N = w.shape[-2], w.shape[-1]
+    if K * N < min_size:
+        return w
+    bk, bn = pick_blocks(K, N)
+    if bk is None or bn is None:
+        return w
+    group = min(policy.weight_group, bk)
+    if bk % group:
+        group = bk
+    bits = policy.weights.bits
+    if policy.weights.is_float:   # fp8 weights: store fp8, per-group scale
+        bits = 8                  # reuse int8 container path via int8 quant
+    fn = lambda m: pack_weight(m, bits=bits, group=group,
+                               block_k=bk, block_n=bn)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * (1.0 + g.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def group_norm(x: jax.Array, g: jax.Array, n_groups: int,
+               eps: float = 1e-5) -> jax.Array:
+    """Per-head group norm (RWKV wkv output)."""
+    *lead, D = x.shape
+    h = x.astype(jnp.float32).reshape(*lead, n_groups, D // n_groups)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = ((h - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, D)
+    return (h * g.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, rotary_pct: float, theta: float) -> jax.Array:
+    rot = int(head_dim * rotary_pct) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, *, rotary_pct: float = 1.0,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, D); pos: (S,) or (B, S) absolute positions.
+
+    rotary_pct < 1 applies rotation to the leading fraction of D only —
+    chatglm's 2D/partial RoPE.
+    """
+    B, S, H, D = x.shape
+    inv = rope_freqs(D, rotary_pct, theta)                 # (rot/2,)
+    rot = inv.shape[0] * 2
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], (B, S))
+    ang = pos[..., None].astype(jnp.float32) * inv[None, None]   # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32).reshape(B, S, H, rot // 2, 2)
+    x0, x1 = xr[..., 0], xr[..., 1]
+    out = jnp.stack([x0 * cos - x1 * sin, x0 * sin + x1 * cos], axis=-1)
+    out = out.reshape(B, S, H, rot)
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_pos(S: int, D: int, offset=0) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32) + offset
+    inv = jnp.exp(-math.log(10000.0) * jnp.arange(0, D, 2, jnp.float32) / D)
+    ang = pos[:, None] * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, p, policy=None, impl="xla"):
+    a = linear(x, p["w1"], policy, impl)
+    b = linear(x, p["w3"], policy, impl)
+    return linear(jax.nn.silu(a.astype(jnp.float32)).astype(x.dtype) * b,
+                  p["w2"], policy, impl)
+
+
+def gelu_mlp(x, p, policy=None, impl="xla"):
+    h = linear(x, p["w1"], policy, impl)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return linear(h, p["w2"], policy, impl)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale: Optional[float] = None,
+               dtype=jnp.bfloat16) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))

@@ -1,0 +1,303 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — transformer backbone.
+
+Per the assignment carve-out, the modality frontend (mel-spectrogram +
+2×Conv1d feature extractor) is a STUB: ``input_specs()`` feeds precomputed
+frame embeddings of shape (B, enc_seq, d_model).  Everything downstream —
+the 4-layer encoder, the causal decoder with self- and cross-attention, the
+quantized KV caches for both — is implemented.
+
+Mixed-precision mapping: the GEMM pipeline applies to every projection;
+the attention pipeline applies to BOTH the decoder self-attention cache
+(grows per decoded token) and the cross-attention cache (computed once from
+the encoder output at prefill, then read every step — the ideal case for
+low-bit KV since it is write-once/read-many).
+
+Whisper uses LayerNorm (with bias) and sinusoidal/learned positions — no
+RoPE (cfg.use_rope=False).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as A
+from repro.core import kvcache as KV
+from repro.core.precision import PrecisionPolicy
+from repro.configs.base import ModelConfig
+
+from . import common as C
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EncDecCache:
+    self_kv: KV.KVCache     # (L, B, S_dec, Hkv, Ds) — decoder self-attn
+    cross_kv: KV.KVCache    # (L, B, enc_seq, Hkv, Ds) — encoder KV, static
+
+
+def init_cache(cfg: ModelConfig, policy: PrecisionPolicy, batch: int,
+               max_seq: int) -> EncDecCache:
+    L = cfg.n_layers
+    mk = lambda S: jax.vmap(lambda _: KV.init_cache(
+        batch, S, cfg.n_kv_heads, cfg.hd, policy.kv))(jnp.arange(L))
+    return EncDecCache(self_kv=mk(max_seq), cross_kv=mk(cfg.enc_seq))
+
+
+def cache_spec(cfg: ModelConfig, policy: PrecisionPolicy, batch: int,
+               max_seq: int) -> EncDecCache:
+    L = cfg.n_layers
+    stack = lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype)
+    mk = lambda S: jax.tree.map(stack, KV.cache_spec(
+        batch, S, cfg.n_kv_heads, cfg.hd, policy.kv))
+    return EncDecCache(self_kv=mk(max_seq), cross_kv=mk(cfg.enc_seq))
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _attn_params(key, n, d, H, Hkv, hd):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": C.dense_init(ks[0], (n, d, H * hd)),
+        "wk": C.dense_init(ks[1], (n, d, Hkv * hd)),
+        "wv": C.dense_init(ks[2], (n, d, Hkv * hd)),
+        "wo": C.dense_init(ks[3], (n, H * hd, d)),
+    }
+
+
+def _ln(n, d):
+    return {"g": jnp.ones((n, d), jnp.bfloat16),
+            "b": jnp.zeros((n, d), jnp.bfloat16)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    Le, Ld = cfg.enc_layers, cfg.n_layers
+    ks = C.split_keys(key, ["enc_attn", "enc_mlp", "dec_self", "dec_cross",
+                            "dec_mlp", "embed", "pos"])
+    km = jax.random.split(ks["enc_mlp"], 2)
+    kd = jax.random.split(ks["dec_mlp"], 2)
+    enc = {
+        "ln1": _ln(Le, d), **_attn_params(ks["enc_attn"], Le, d, H, Hkv, hd),
+        "ln2": _ln(Le, d),
+        "w1": C.dense_init(km[0], (Le, d, f)),
+        "b1": jnp.zeros((Le, f), jnp.bfloat16),
+        "w2": C.dense_init(km[1], (Le, f, d)),
+        "b2": jnp.zeros((Le, d), jnp.bfloat16),
+    }
+    dec = {
+        "ln1": _ln(Ld, d), **_attn_params(ks["dec_self"], Ld, d, H, Hkv, hd),
+        "lnx": _ln(Ld, d),
+        "ln2": _ln(Ld, d),
+        "w1": C.dense_init(kd[0], (Ld, d, f)),
+        "b1": jnp.zeros((Ld, f), jnp.bfloat16),
+        "w2": C.dense_init(kd[1], (Ld, f, d)),
+        "b2": jnp.zeros((Ld, d), jnp.bfloat16),
+    }
+    cross = _attn_params(ks["dec_cross"], Ld, d, H, Hkv, hd)
+    dec.update({f"x{k}": v for k, v in cross.items()})
+    return {
+        "encoder": enc,
+        "decoder": dec,
+        "embed": C.dense_init(ks["embed"], (cfg.vocab, d), scale=0.02),
+        "dec_pos": C.dense_init(ks["pos"], (cfg.max_dec_pos, d), scale=0.01),
+        "enc_ln_post": {"g": jnp.ones((d,), jnp.bfloat16),
+                        "b": jnp.zeros((d,), jnp.bfloat16)},
+        "final_ln": {"g": jnp.ones((d,), jnp.bfloat16),
+                     "b": jnp.zeros((d,), jnp.bfloat16)},
+    }
+
+
+def _layer_norm(x, p, eps):
+    return C.layer_norm(x, p["g"], p["b"], eps)
+
+
+def _mlp(h, lp, policy, impl):
+    y = C.linear(h, lp["w1"], policy, impl) + lp["b1"].astype(h.dtype)
+    y = jax.nn.gelu(y.astype(jnp.float32)).astype(h.dtype)
+    return C.linear(y, lp["w2"], policy, impl) + lp["b2"].astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Encoder: bidirectional self-attention over stub frame embeddings
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array,
+           policy: Optional[PrecisionPolicy] = None,
+           impl: str = "xla") -> jax.Array:
+    """frames: (B, enc_seq, d_model) precomputed conv-frontend embeddings."""
+    B, S, d = frames.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = frames.astype(jnp.bfloat16) + C.sinusoidal_pos(S, d)[None]
+
+    def body(xc, lp):
+        h = _layer_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = C.linear(h, lp["wq"], policy, impl).reshape(B, S, H, hd)
+        k = C.linear(h, lp["wk"], policy, impl).reshape(B, S, Hkv, hd)
+        v = C.linear(h, lp["wv"], policy, impl).reshape(B, S, Hkv, hd)
+        attn = A.flash_attention(q, k, v, causal=False)
+        xc = xc + C.linear(attn.reshape(B, S, -1), lp["wo"], policy, impl)
+        h2 = _layer_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + _mlp(h2, lp, policy, impl)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return _layer_norm(x, params["enc_ln_post"], cfg.norm_eps)
+
+
+def build_cross_cache(params, cfg: ModelConfig, policy: PrecisionPolicy,
+                      enc_out: jax.Array, cache: EncDecCache,
+                      impl: str = "xla") -> EncDecCache:
+    """Project encoder output through each decoder layer's cross K/V and
+    store quantized — the write-once/read-many half of the attention
+    pipeline."""
+    B, S, _ = enc_out.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def per_layer(cache_l, lp_xk, lp_xv):
+        k = C.linear(enc_out, lp_xk, policy, impl).reshape(B, S, Hkv, hd)
+        v = C.linear(enc_out, lp_xv, policy, impl).reshape(B, S, Hkv, hd)
+        return KV.append(cache_l, k, v, jnp.int32(0), policy.kv)
+
+    new_cross = jax.vmap(per_layer)(
+        cache.cross_kv, params["decoder"]["xwk"], params["decoder"]["xwv"])
+    # vmap over layers needs stacked weights; xwk is (L, d, Hkv*hd) — ok.
+    return EncDecCache(self_kv=cache.self_kv, cross_kv=new_cross)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_pos_embed(params, pos, B, T):
+    """Learned decoder positions; clamp to table size (shape exercise for
+    decode_32k uses positions beyond whisper's architectural 448)."""
+    table = params["dec_pos"]
+    idx = jnp.clip(pos, 0, table.shape[0] - 1)
+    return jnp.take(table, idx, axis=0)
+
+
+def prefill(params, cfg: ModelConfig, policy: PrecisionPolicy, tokens,
+            cache: EncDecCache, frames: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None,
+            impl: str = "xla") -> Tuple[jax.Array, EncDecCache]:
+    """tokens: (B, T) decoder prompt; frames: (B, enc_seq, d) stub features."""
+    if enc_out is None:
+        assert frames is not None, "encoder input required at prefill"
+        enc_out = encode(params, cfg, frames, policy, impl)
+    cache = build_cross_cache(params, cfg, policy, enc_out, cache, impl)
+
+    B, T = tokens.shape
+    d = cfg.d_model
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.arange(T)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(policy.compute_dtype)
+    x = x + _dec_pos_embed(params, pos, B, T)[None]
+
+    def body(xc, sl):
+        lp, self_l, cross_l = sl
+        h = _layer_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = C.linear(h, lp["wq"], policy, impl).reshape(B, T, H, hd)
+        k = C.linear(h, lp["wk"], policy, impl).reshape(B, T, Hkv, hd)
+        v = C.linear(h, lp["wv"], policy, impl).reshape(B, T, Hkv, hd)
+        attn = A.flash_attention(q, k, v, causal=True)
+        self_l = KV.append(self_l, k, v, jnp.int32(0), policy.kv)
+        xc = xc + C.linear(attn.reshape(B, T, -1), lp["wo"], policy, impl)
+        # cross attention against the quantized encoder KV
+        hx = _layer_norm(xc, lp["lnx"], cfg.norm_eps)
+        qx = C.linear(hx, lp["xwq"], policy, impl).reshape(B, T, H, hd)
+        xattn = A.cross_attention(qx, cross_l, policy.kv)
+        xc = xc + C.linear(xattn.reshape(B, T, -1), lp["xwo"], policy, impl)
+        h2 = _layer_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + _mlp(h2, lp, policy, impl)
+        return xc, self_l
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], cache.self_kv, cache.cross_kv))
+    h_last = _layer_norm(x[:, -1], params["final_ln"], cfg.norm_eps)
+    logits = jnp.dot(h_last, params["embed"].T.astype(h_last.dtype))
+    return logits, EncDecCache(self_kv=new_self, cross_kv=cache.cross_kv)
+
+
+def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy, tokens,
+                cache: EncDecCache, pos,
+                impl: str = "xla") -> Tuple[jax.Array, EncDecCache]:
+    B, T = tokens.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    x = jnp.take(params["embed"], tokens, axis=0).astype(policy.compute_dtype)
+    pvec = pos if per_slot else jnp.broadcast_to(pos, (B,))
+    x = x + _dec_pos_embed(params, pvec, B, T)[:, None]
+
+    def body(xc, sl):
+        lp, self_l, cross_l = sl
+        h = _layer_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = C.linear(h, lp["wq"], policy, impl).reshape(B, T, H, hd)
+        k = C.linear(h, lp["wk"], policy, impl).reshape(B, T, Hkv, hd)
+        v = C.linear(h, lp["wv"], policy, impl).reshape(B, T, Hkv, hd)
+        if per_slot:
+            self_l = KV.append_per_slot(self_l, k, v, pos, policy.kv)
+        else:
+            self_l = KV.append(self_l, k, v, pos, policy.kv)
+        attn = A.decode_attention(q, self_l, policy.kv, pos)
+        xc = xc + C.linear(attn.reshape(B, T, -1), lp["wo"], policy, impl)
+        hx = _layer_norm(xc, lp["lnx"], cfg.norm_eps)
+        qx = C.linear(hx, lp["xwq"], policy, impl).reshape(B, T, H, hd)
+        xattn = A.cross_attention(qx, cross_l, policy.kv)
+        xc = xc + C.linear(xattn.reshape(B, T, -1), lp["xwo"], policy, impl)
+        h2 = _layer_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + _mlp(h2, lp, policy, impl)
+        return xc, self_l
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], cache.self_kv, cache.cross_kv))
+    h_last = _layer_norm(x[:, -1], params["final_ln"], cfg.norm_eps)
+    logits = jnp.dot(h_last, params["embed"].T.astype(h_last.dtype))
+    return logits, EncDecCache(self_kv=new_self, cross_kv=cache.cross_kv)
+
+
+def hidden_states(params, cfg: ModelConfig, tokens, frames=None,
+                  policy=None, impl="xla", remat: bool = False) -> jax.Array:
+    """Teacher-forced decoder hidden states (training path)."""
+    from repro.core.precision import get_policy
+    policy = policy or get_policy("w16a16kv16")
+    B, T = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    enc_out = encode(params, cfg, frames, policy, impl)
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.arange(T)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = x + _dec_pos_embed(params, pos, B, T)[None]
+    S = enc_out.shape[1]
+
+    def body(xc, lp):
+        h = _layer_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = C.linear(h, lp["wq"], policy, impl).reshape(B, T, H, hd)
+        k = C.linear(h, lp["wk"], policy, impl).reshape(B, T, Hkv, hd)
+        v = C.linear(h, lp["wv"], policy, impl).reshape(B, T, Hkv, hd)
+        attn = A.flash_attention(q, k, v, causal=True)
+        xc = xc + C.linear(attn.reshape(B, T, -1), lp["wo"], policy, impl)
+        hx = _layer_norm(xc, lp["lnx"], cfg.norm_eps)
+        qx = C.linear(hx, lp["xwq"], policy, impl).reshape(B, T, H, hd)
+        kx = C.linear(enc_out, lp["xwk"], policy, impl).reshape(B, S, Hkv, hd)
+        vx = C.linear(enc_out, lp["xwv"], policy, impl).reshape(B, S, Hkv, hd)
+        xattn = A.flash_attention(qx, kx, vx, causal=False)
+        xc = xc + C.linear(xattn.reshape(B, T, -1), lp["xwo"], policy, impl)
+        h2 = _layer_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + _mlp(h2, lp, policy, impl)
+        return xc, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return _layer_norm(x, params["final_ln"], cfg.norm_eps)

@@ -1,0 +1,169 @@
+"""Model registry: one uniform functional API over every architecture family.
+
+``build(cfg)`` returns a :class:`Model` whose members close over the family
+module — the serving engine, training loop, launcher and dry-run all program
+against this surface and stay architecture-agnostic:
+
+    model.init_params(key)                         -> params pytree
+    model.init_cache(policy, batch, max_seq)       -> cache/state pytree
+    model.cache_spec(policy, batch, max_seq)       -> ShapeDtypeStruct pytree
+    model.prefill(params, policy, tokens, cache, **extra)  -> (logits, cache)
+    model.decode_step(params, policy, tokens, cache, pos)  -> (logits, cache)
+    model.hidden_states(params, tokens, policy=..., remat=..., **extra)
+    model.loss_fn(params, policy, tokens, targets, **extra) -> scalar loss
+    model.extra_inputs(key, batch)        -> dict of stub modality arrays
+    model.extra_input_specs(batch)        -> dict of ShapeDtypeStructs
+
+``extra`` carries the modality-stub inputs: ``img_embeds`` for VLMs
+(precomputed ViT patch embeddings), ``frames`` for audio (precomputed
+conv-frontend frame embeddings) — the one allowed stub per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+
+from . import encdec as ED
+from . import rglru as G
+from . import rwkv6 as R
+from . import transformer as T
+
+VIT_WIDTH = 1024   # stub ViT/InternViT output width (projected to d_model)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    cache_spec: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    hidden_states: Callable[..., Any]
+    extra_inputs: Callable[..., Dict[str, jax.Array]]
+    extra_input_specs: Callable[..., Dict[str, jax.ShapeDtypeStruct]]
+
+    def logits(self, params, h):
+        return T.lm_logits(params, h)
+
+    def loss_fn(self, params, policy, tokens, targets, remat=False, **extra):
+        """Causal LM cross-entropy (mean over tokens), fp32 logits."""
+        h = self.hidden_states(params, tokens, policy=policy, remat=remat,
+                               **extra)
+        # VLM prepends image tokens: score only the text positions (tail).
+        if h.shape[1] != tokens.shape[1]:
+            h = h[:, h.shape[1] - tokens.shape[1]:]
+        logits = T.lm_logits(params, h).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+
+def _no_extra(*a, **k) -> Dict[str, Any]:
+    return {}
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        extra_inputs = _no_extra
+        extra_specs = _no_extra
+        if cfg.n_img_tokens:
+            def extra_inputs(key, batch):   # noqa: F811
+                return {"img_embeds": jax.random.normal(
+                    key, (batch, cfg.n_img_tokens, VIT_WIDTH),
+                    jnp.float32).astype(jnp.bfloat16)}
+
+            def extra_specs(batch):         # noqa: F811
+                return {"img_embeds": jax.ShapeDtypeStruct(
+                    (batch, cfg.n_img_tokens, VIT_WIDTH), jnp.bfloat16)}
+
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: T.init_params(cfg, key),
+            init_cache=lambda policy, batch, max_seq: T.init_cache(
+                cfg, policy, batch, max_seq),
+            cache_spec=lambda policy, batch, max_seq: T.cache_spec(
+                cfg, policy, batch, max_seq),
+            prefill=lambda params, policy, tokens, cache, **ex: T.prefill(
+                params, cfg, policy, tokens, cache, **ex),
+            decode_step=lambda params, policy, tokens, cache, pos: (
+                T.decode_step(params, cfg, policy, tokens, cache, pos)),
+            hidden_states=lambda params, tokens, policy=None, remat=False,
+            **ex: T.hidden_states(params, cfg, tokens, policy=policy,
+                                  remat=remat, **ex),
+            extra_inputs=extra_inputs,
+            extra_input_specs=extra_specs,
+        )
+
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: R.init_params(cfg, key),
+            init_cache=lambda policy, batch, max_seq: R.init_state(cfg, batch),
+            cache_spec=lambda policy, batch, max_seq: R.state_spec(cfg, batch),
+            prefill=lambda params, policy, tokens, cache, **ex: R.prefill(
+                params, cfg, policy, tokens, cache),
+            decode_step=lambda params, policy, tokens, cache, pos: (
+                R.decode_step(params, cfg, policy, tokens, cache, pos)),
+            hidden_states=lambda params, tokens, policy=None, remat=False,
+            **ex: R.hidden_states(params, cfg, tokens, policy=policy,
+                                  remat=remat),
+            extra_inputs=_no_extra,
+            extra_input_specs=_no_extra,
+        )
+
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: G.init_params(cfg, key),
+            init_cache=lambda policy, batch, max_seq: G.init_cache(
+                cfg, policy, batch, max_seq),
+            cache_spec=lambda policy, batch, max_seq: G.cache_spec(
+                cfg, policy, batch, max_seq),
+            prefill=lambda params, policy, tokens, cache, **ex: G.prefill(
+                params, cfg, policy, tokens, cache),
+            decode_step=lambda params, policy, tokens, cache, pos: (
+                G.decode_step(params, cfg, policy, tokens, cache, pos)),
+            hidden_states=lambda params, tokens, policy=None, remat=False,
+            **ex: G.hidden_states(params, cfg, tokens, policy=policy,
+                                  remat=remat),
+            extra_inputs=_no_extra,
+            extra_input_specs=_no_extra,
+        )
+
+    if fam == "audio":
+        def extra_inputs(key, batch):
+            return {"frames": jax.random.normal(
+                key, (batch, cfg.enc_seq, cfg.d_model),
+                jnp.float32).astype(jnp.bfloat16)}
+
+        def extra_specs(batch):
+            return {"frames": jax.ShapeDtypeStruct(
+                (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)}
+
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: ED.init_params(cfg, key),
+            init_cache=lambda policy, batch, max_seq: ED.init_cache(
+                cfg, policy, batch, max_seq),
+            cache_spec=lambda policy, batch, max_seq: ED.cache_spec(
+                cfg, policy, batch, max_seq),
+            prefill=lambda params, policy, tokens, cache, **ex: ED.prefill(
+                params, cfg, policy, tokens, cache, **ex),
+            decode_step=lambda params, policy, tokens, cache, pos: (
+                ED.decode_step(params, cfg, policy, tokens, cache, pos)),
+            hidden_states=lambda params, tokens, policy=None, remat=False,
+            **ex: ED.hidden_states(params, cfg, tokens, policy=policy,
+                                   remat=remat, **ex),
+            extra_inputs=extra_inputs,
+            extra_input_specs=extra_specs,
+        )
+
+    raise ValueError(f"unknown family {fam!r}")

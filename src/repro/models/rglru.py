@@ -1,0 +1,361 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427) — hybrid family: RG-LRU
+recurrent blocks + local (sliding-window) MQA attention, pattern
+(recurrent, recurrent, attention) repeating, 1 attention : 2 recurrent.
+
+RG-LRU (diagonal gated linear recurrence, per channel):
+
+    r_t = σ(W_a x_t)          i_t = σ(W_i x_t)
+    log a_t = -c · softplus(Λ) · r_t            (c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Diagonal ⇒ train/prefill via ``jax.lax.associative_scan`` (O(log S) depth,
+MXU-free but fully parallel); decode is the O(1) per-token update.  A
+causal depthwise conv (width 4) precedes the LRU, as in the paper.
+
+26 layers = 8 × (rec, rec, attn) superblocks + 2 trailing recurrent
+blocks.  Attention layers use the mixed-precision KV cache + attention
+pipeline (window 2048); recurrent state stays bf16/f32 (accumulating state
+— see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as A
+from repro.core import kvcache as KV
+from repro.core.precision import PrecisionPolicy
+from repro.configs.base import ModelConfig
+
+from . import common as C
+
+LRU_C = 8.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HybridCache:
+    kv: KV.KVCache         # (L_attn, B, S, 1, hd) quantized
+    h: jax.Array           # (L_rec, B, W) f32 LRU state
+    conv: jax.Array        # (L_rec, B, conv_width-1, W) conv tail state
+
+
+def _counts(cfg: ModelConfig) -> Tuple[int, int, int]:
+    n_super = cfg.n_layers // cfg.rglru_period            # 8
+    n_trail = cfg.n_layers - n_super * cfg.rglru_period   # 2 (recurrent)
+    n_rec = n_super * (cfg.rglru_period - 1) + n_trail
+    return n_super, n_rec, n_trail
+
+
+def init_cache(cfg: ModelConfig, policy: PrecisionPolicy, batch: int,
+               max_seq: int) -> HybridCache:
+    n_super, n_rec, _ = _counts(cfg)
+    W = cfg.lru_width or cfg.d_model
+    kv = jax.vmap(lambda _: KV.init_cache(batch, max_seq, cfg.n_kv_heads,
+                                          cfg.hd, policy.kv))(
+        jnp.arange(n_super))
+    return HybridCache(
+        kv=kv,
+        h=jnp.zeros((n_rec, batch, W), jnp.float32),
+        conv=jnp.zeros((n_rec, batch, cfg.conv_width - 1, W), jnp.bfloat16),
+    )
+
+
+def cache_spec(cfg: ModelConfig, policy: PrecisionPolicy, batch: int,
+               max_seq: int) -> HybridCache:
+    n_super, n_rec, _ = _counts(cfg)
+    W = cfg.lru_width or cfg.d_model
+    base = KV.cache_spec(batch, max_seq, cfg.n_kv_heads, cfg.hd, policy.kv)
+    kv = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_super,) + s.shape, s.dtype), base)
+    f = jax.ShapeDtypeStruct
+    return HybridCache(kv=kv, h=f((n_rec, batch, W), jnp.float32),
+                       conv=f((n_rec, batch, cfg.conv_width - 1, W),
+                              jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _init_rec_block(cfg, key, n):
+    d = cfg.d_model
+    W = cfg.lru_width or d
+    f = cfg.d_ff
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.zeros((n, d), jnp.bfloat16),
+        "wx": C.dense_init(ks[0], (n, d, W)),       # recurrence branch in
+        "wy": C.dense_init(ks[1], (n, d, W)),       # gate branch in
+        "wo": C.dense_init(ks[2], (n, W, d)),
+        "conv_w": C.dense_init(ks[3], (n, cfg.conv_width, W), scale=0.5),
+        "wa": C.dense_init(ks[4], (n, W, W), scale=0.01),   # recurrence gate
+        "wi": C.dense_init(ks[5], (n, W, W), scale=0.01),   # input gate
+        "lam": jnp.full((n, W), 2.0, jnp.float32),          # Λ
+        "ln2": jnp.zeros((n, d), jnp.bfloat16),
+        "w1": C.dense_init(ks[6], (n, d, f)),
+        "w3": C.dense_init(jax.random.fold_in(ks[6], 1), (n, d, f)),
+        "w2": C.dense_init(ks[7], (n, f, d)),
+    }
+
+
+def _init_attn_block(cfg, key, n):
+    d, f = cfg.d_model, cfg.d_ff
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 7)
+    return {
+        "ln1": jnp.zeros((n, d), jnp.bfloat16),
+        "wq": C.dense_init(ks[0], (n, d, H * hd)),
+        "wk": C.dense_init(ks[1], (n, d, Hkv * hd)),
+        "wv": C.dense_init(ks[2], (n, d, Hkv * hd)),
+        "wo": C.dense_init(ks[3], (n, H * hd, d)),
+        "ln2": jnp.zeros((n, d), jnp.bfloat16),
+        "w1": C.dense_init(ks[4], (n, d, f)),
+        "w3": C.dense_init(ks[5], (n, d, f)),
+        "w2": C.dense_init(ks[6], (n, f, d)),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    n_super, n_rec, n_trail = _counts(cfg)
+    ks = C.split_keys(key, ["embed", "rec1", "rec2", "attn", "trail", "head"])
+    return {
+        "embed": C.dense_init(ks["embed"], (cfg.vocab, cfg.d_model),
+                              scale=0.02),
+        "rec1": _init_rec_block(cfg, ks["rec1"], n_super),
+        "rec2": _init_rec_block(cfg, ks["rec2"], n_super),
+        "attn": _init_attn_block(cfg, ks["attn"], n_super),
+        "trail": _init_rec_block(cfg, ks["trail"], n_trail),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+        "lm_head": C.dense_init(ks["head"], (cfg.d_model, cfg.vocab),
+                                scale=0.02),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv_seq(x, w, tail):
+    """x: (B,S,W); w: (cw,W); tail: (B,cw-1,W) → (y, new_tail)."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[cw - 1 - i][None, None]
+            for i in range(cw))
+    return y, xp[:, -(cw - 1):]
+
+
+def _rglru_seq(x, lp, policy, impl, h0):
+    """x: (B,S,W) post-conv; h0: (B,W) f32 → (y (B,S,W), h_fin)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(C.linear(x, lp["wa"], policy, impl).astype(jnp.float32))
+    i = jax.nn.sigmoid(C.linear(x, lp["wi"], policy, impl).astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(lp["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = B_cum + A_cum * h0[:, None]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _rec_block_seq(x, lp, cfg, policy, impl, h0, conv_tail):
+    hin = C.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(C.linear(hin, lp["wy"], policy, impl)
+                       .astype(jnp.float32))
+    xr = C.linear(hin, lp["wx"], policy, impl)
+    xr, new_tail = _causal_conv_seq(xr, lp["conv_w"], conv_tail)
+    y, h_fin = _rglru_seq(xr, lp, policy, impl, h0)
+    y = (y.astype(jnp.float32) * gate).astype(x.dtype)
+    x = x + C.linear(y, lp["wo"], policy, impl)
+    h2 = C.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + C.swiglu(h2, {"w1": lp["w1"], "w3": lp["w3"], "w2": lp["w2"]},
+                     policy, impl)
+    return x, h_fin, new_tail
+
+
+def _rec_block_step(x, lp, cfg, policy, impl, h0, conv_tail):
+    """Single-token recurrent block.  x: (B,d)."""
+    hin = C.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(C.linear(hin, lp["wy"], policy, impl)
+                       .astype(jnp.float32))
+    xr = C.linear(hin, lp["wx"], policy, impl)                  # (B,W)
+    cw = lp["conv_w"].shape[0]
+    xfull = jnp.concatenate([conv_tail.astype(xr.dtype), xr[:, None]], axis=1)
+    y = sum(xfull[:, -(i + 1)] * lp["conv_w"][i][None] for i in range(cw))
+    new_tail = xfull[:, -(cw - 1):]
+    r = jax.nn.sigmoid(C.linear(y, lp["wa"], policy, impl).astype(jnp.float32))
+    i = jax.nn.sigmoid(C.linear(y, lp["wi"], policy, impl).astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(lp["lam"])[None] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * y.astype(jnp.float32))
+    h_new = a * h0 + b
+    y = (h_new * gate).astype(x.dtype)
+    x = x + C.linear(y, lp["wo"], policy, impl)
+    h2 = C.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + C.swiglu(h2, {"w1": lp["w1"], "w3": lp["w3"], "w2": lp["w2"]},
+                     policy, impl)
+    return x, h_new, new_tail
+
+
+# ---------------------------------------------------------------------------
+# Attention block (local / sliding window)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_seq(x, lp, cfg, policy, impl, cache_l, write_cache):
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.arange(S)
+    h = C.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = C.linear(h, lp["wq"], policy, impl).reshape(B, S, H, hd)
+    k = C.linear(h, lp["wk"], policy, impl).reshape(B, S, Hkv, hd)
+    v = C.linear(h, lp["wv"], policy, impl).reshape(B, S, Hkv, hd)
+    q = C.apply_rope(q, pos, theta=cfg.rope_theta)
+    k = C.apply_rope(k, pos, theta=cfg.rope_theta)
+    attn = A.flash_attention(q, k, v, causal=True, window=cfg.window)
+    if write_cache:
+        cache_l = KV.append(cache_l, k, v, jnp.int32(0), policy.kv)
+    x = x + C.linear(attn.reshape(B, S, -1), lp["wo"], policy, impl)
+    h2 = C.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + C.swiglu(h2, {"w1": lp["w1"], "w3": lp["w3"], "w2": lp["w2"]},
+                     policy, impl)
+    return x, cache_l
+
+
+def _attn_block_step(x, lp, cfg, policy, impl, cache_l, pos):
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    rope_pos = pos[:, None] if per_slot else jnp.broadcast_to(pos, (1,))[None]
+    rope_pos = jnp.broadcast_to(rope_pos, (B, 1))
+    h = C.rms_norm(x, lp["ln1"], cfg.norm_eps)[:, None]
+    q = C.linear(h, lp["wq"], policy, impl).reshape(B, 1, H, hd)
+    k = C.linear(h, lp["wk"], policy, impl).reshape(B, 1, Hkv, hd)
+    v = C.linear(h, lp["wv"], policy, impl).reshape(B, 1, Hkv, hd)
+    q = C.apply_rope(q, rope_pos, theta=cfg.rope_theta)
+    k = C.apply_rope(k, rope_pos, theta=cfg.rope_theta)
+    if per_slot:
+        cache_l = KV.append_per_slot(cache_l, k, v, pos, policy.kv)
+    else:
+        cache_l = KV.append(cache_l, k, v, pos, policy.kv)
+    attn = A.decode_attention(q, cache_l, policy.kv, pos, window=cfg.window)
+    x = x + C.linear(attn.reshape(B, -1), lp["wo"], policy, impl)
+    h2 = C.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + C.swiglu(h2, {"w1": lp["w1"], "w3": lp["w3"], "w2": lp["w2"]},
+                     policy, impl)
+    return x, cache_l
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _run(params, cfg, tokens, policy, impl, cache: HybridCache,
+         write_cache: bool, remat=False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if policy is not None:
+        x = x.astype(policy.compute_dtype)
+    n_super, n_rec, n_trail = _counts(cfg)
+
+    def super_body(xc, sl):
+        r1, r2, at, h1, c1, h2s, c2, kv_l = sl
+        xc, h1n, c1n = _rec_block_seq(xc, r1, cfg, policy, impl, h1, c1)
+        xc, h2n, c2n = _rec_block_seq(xc, r2, cfg, policy, impl, h2s, c2)
+        xc, kv_n = _attn_block_seq(xc, at, cfg, policy, impl, kv_l,
+                                   write_cache)
+        return xc, (h1n, c1n, h2n, c2n, kv_n)
+
+    if remat:
+        super_body = jax.checkpoint(super_body)
+    # recurrent states: first 2·n_super belong to superblocks, rest trail
+    h_sb = cache.h[:2 * n_super].reshape(n_super, 2, *cache.h.shape[1:])
+    c_sb = cache.conv[:2 * n_super].reshape(n_super, 2, *cache.conv.shape[1:])
+    xs = (params["rec1"], params["rec2"], params["attn"],
+          h_sb[:, 0], c_sb[:, 0], h_sb[:, 1], c_sb[:, 1], cache.kv)
+    x, (h1, c1, h2, c2, kv) = jax.lax.scan(super_body, x, xs)
+
+    def trail_body(xc, sl):
+        tp, h0, ct = sl
+        xc, hn, cn = _rec_block_seq(xc, tp, cfg, policy, impl, h0, ct)
+        return xc, (hn, cn)
+
+    x, (ht, ct) = jax.lax.scan(
+        trail_body, x,
+        (params["trail"], cache.h[2 * n_super:], cache.conv[2 * n_super:]))
+
+    h_new = jnp.concatenate([
+        jnp.stack([h1, h2], 1).reshape(2 * n_super, *h1.shape[1:]), ht], 0)
+    c_new = jnp.concatenate([
+        jnp.stack([c1, c2], 1).reshape(2 * n_super, *c1.shape[1:]), ct], 0)
+    new_cache = HybridCache(kv=kv, h=h_new, conv=c_new)
+    return C.rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache
+
+
+def hidden_states(params, cfg, tokens, policy=None, impl="xla", remat=False):
+    cache = init_cache(cfg, policy or _default_policy(), tokens.shape[0],
+                       tokens.shape[1])
+    h, _ = _run(params, cfg, tokens, policy, impl, cache, False, remat)
+    return h
+
+
+def _default_policy():
+    from repro.core.precision import get_policy
+    return get_policy("w16a16kv16")
+
+
+def prefill(params, cfg, policy, tokens, cache: HybridCache, impl="xla"):
+    h, cache = _run(params, cfg, tokens, policy, impl, cache, True)
+    from .transformer import lm_logits
+    return lm_logits(params, h[:, -1]), cache
+
+
+def decode_step(params, cfg, policy, tokens, cache: HybridCache, pos,
+                impl="xla"):
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0)
+    x = x.astype(policy.compute_dtype)
+    n_super, n_rec, n_trail = _counts(cfg)
+
+    def super_body(xc, sl):
+        r1, r2, at, h1, c1, h2s, c2, kv_l = sl
+        xc, h1n, c1n = _rec_block_step(xc, r1, cfg, policy, impl, h1, c1)
+        xc, h2n, c2n = _rec_block_step(xc, r2, cfg, policy, impl, h2s, c2)
+        xc, kv_n = _attn_block_step(xc, at, cfg, policy, impl, kv_l, pos)
+        return xc, (h1n, c1n, h2n, c2n, kv_n)
+
+    h_sb = cache.h[:2 * n_super].reshape(n_super, 2, *cache.h.shape[1:])
+    c_sb = cache.conv[:2 * n_super].reshape(n_super, 2, *cache.conv.shape[1:])
+    xs = (params["rec1"], params["rec2"], params["attn"],
+          h_sb[:, 0], c_sb[:, 0], h_sb[:, 1], c_sb[:, 1], cache.kv)
+    x, (h1, c1, h2, c2, kv) = jax.lax.scan(super_body, x, xs)
+
+    def trail_body(xc, sl):
+        tp, h0, ct = sl
+        xc, hn, cn = _rec_block_step(xc, tp, cfg, policy, impl, h0, ct)
+        return xc, (hn, cn)
+
+    x, (ht, ct) = jax.lax.scan(
+        trail_body, x,
+        (params["trail"], cache.h[2 * n_super:], cache.conv[2 * n_super:]))
+
+    h_new = jnp.concatenate([
+        jnp.stack([h1, h2], 1).reshape(2 * n_super, *h1.shape[1:]), ht], 0)
+    c_new = jnp.concatenate([
+        jnp.stack([c1, c2], 1).reshape(2 * n_super, *c1.shape[1:]), ct], 0)
+    new_cache = HybridCache(kv=kv, h=h_new, conv=c_new)
+    from .transformer import lm_logits
+    h_last = C.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h_last), new_cache

@@ -1,0 +1,303 @@
+"""RWKV6 ("Finch", arXiv:2404.05892) — attention-free linear-recurrence
+family with data-dependent decay.
+
+The wkv recurrence per head (state S ∈ R^{dk×dv}):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t)ᵀ v_t)
+
+with data-dependent per-channel decay w_t from a LoRA on the token-shifted
+input.  Train/prefill use the **chunked GLA form** (chunk C=64): intra-chunk
+contributions via a masked (C×C) matmul with factorized decay ratios, state
+carried across chunks by a lax.scan — MXU-friendly, O(S·C·d) instead of a
+length-S sequential scan.  Decode is the O(1)-state recurrence.
+
+Numerics (DESIGN.md §2 divergence): log-decay is parameterized as
+``-sigmoid(w_raw)`` ∈ (-1, 0) instead of the paper's ``-exp(w_raw)`` — this
+floors the per-step decay at e⁻¹ (a forgotten channel still decays to 1e-9
+within ~20 tokens) and bounds the chunk-local 1/decay ratios by e^C = e^64
+< f32 max, making the factorized chunk form stable in fp32 without
+secondary chunking.
+
+The paper's attention pipeline is **inapplicable** here (no KV cache); the
+GEMM pipeline applies to all projections.  The recurrent state stays bf16 —
+quantizing an accumulating state would compound error each step
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.configs.base import ModelConfig
+
+from . import common as C
+
+CHUNK = 64
+LORA = 64
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RWKVState:
+    tm_shift: jax.Array    # (L, B, d)   last token seen by time-mix
+    cm_shift: jax.Array    # (L, B, d)   last token seen by channel-mix
+    wkv: jax.Array         # (L, B, H, dk, dv) recurrent state (bf16-free: f32)
+
+
+def init_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    L, d, dh = cfg.n_layers, cfg.d_model, cfg.rwkv_head_dim
+    H = d // dh
+    return RWKVState(
+        tm_shift=jnp.zeros((L, batch, d), jnp.bfloat16),
+        cm_shift=jnp.zeros((L, batch, d), jnp.bfloat16),
+        wkv=jnp.zeros((L, batch, H, dh, dh), jnp.float32),
+    )
+
+
+def state_spec(cfg: ModelConfig, batch: int) -> RWKVState:
+    L, d, dh = cfg.n_layers, cfg.d_model, cfg.rwkv_head_dim
+    H = d // dh
+    f = jax.ShapeDtypeStruct
+    return RWKVState(tm_shift=f((L, batch, d), jnp.bfloat16),
+                     cm_shift=f((L, batch, d), jnp.bfloat16),
+                     wkv=f((L, batch, H, dh, dh), jnp.float32))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    ks = C.split_keys(key, ["embed", "proj", "lora", "cm", "head"])
+    mix = lambda i: jnp.full((L, d), 0.5, jnp.bfloat16)
+    kp = jax.random.split(ks["proj"], 6)
+    kl = jax.random.split(ks["lora"], 2)
+    kc = jax.random.split(ks["cm"], 3)
+    layers = {
+        "ln1": jnp.zeros((L, d), jnp.bfloat16),
+        "ln2": jnp.zeros((L, d), jnp.bfloat16),
+        # time-mix lerp coefficients (static μ; Finch's data-dependent
+        # token-shift LoRA folded into the decay LoRA for brevity)
+        "mu_r": mix(0), "mu_k": mix(1), "mu_v": mix(2),
+        "mu_w": mix(3), "mu_g": mix(4),
+        "wr": C.dense_init(kp[0], (L, d, d)),
+        "wk": C.dense_init(kp[1], (L, d, d)),
+        "wv": C.dense_init(kp[2], (L, d, d)),
+        "wg": C.dense_init(kp[3], (L, d, d)),
+        "wo": C.dense_init(kp[4], (L, d, d)),
+        # data-dependent decay LoRA: w_raw = w0 + tanh(x_w @ A) @ B
+        "w_A": C.dense_init(kl[0], (L, d, LORA), scale=0.01),
+        "w_B": C.dense_init(kl[1], (L, LORA, d), scale=0.01),
+        "w0": jnp.zeros((L, d), jnp.bfloat16),
+        "u": C.dense_init(kp[5], (L, H, dh), scale=0.5),
+        "ln_x": jnp.ones((L, d), jnp.bfloat16),
+        # channel-mix
+        "mu_ck": mix(5), "mu_cr": mix(6),
+        "ck": C.dense_init(kc[0], (L, d, f)),
+        "cv": C.dense_init(kc[1], (L, f, d)),
+        "cr": C.dense_init(kc[2], (L, d, d)),
+    }
+    return {
+        "embed": C.dense_init(ks["embed"], (cfg.vocab, d), scale=0.02),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), jnp.bfloat16),
+        "lm_head": C.dense_init(ks["head"], (d, cfg.vocab), scale=0.02),
+    }
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _log_decay(xw, lp, policy, impl):
+    w_raw = C.linear(jnp.tanh(C.linear(xw, lp["w_A"], policy, impl)
+                              .astype(jnp.float32)).astype(xw.dtype),
+                     lp["w_B"], policy, impl)
+    w_raw = w_raw.astype(jnp.float32) + lp["w0"].astype(jnp.float32)
+    return -jax.nn.sigmoid(w_raw)          # ∈ (-1, 0): stable chunk form
+
+
+# ---------------------------------------------------------------------------
+# Chunked GLA wkv (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _wkv_chunked(r, k, v, logw, u, s0):
+    """r,k,v: (B, S, H, dh); logw: (B, S, H, dh); u: (H, dh);
+    s0: (B, H, dh, dh).  Returns (y (B,S,H,dh), s_final)."""
+    B, S, H, dh = r.shape
+    assert S % CHUNK == 0 or S < CHUNK
+    Cn = min(CHUNK, S)
+    n = S // Cn
+    rs = r.reshape(B, n, Cn, H, dh).astype(jnp.float32)
+    ks_ = k.reshape(B, n, Cn, H, dh).astype(jnp.float32)
+    vs = v.reshape(B, n, Cn, H, dh).astype(jnp.float32)
+    lw = logw.reshape(B, n, Cn, H, dh)
+    u = u.astype(jnp.float32)
+
+    def chunk_step(s, xs):
+        rc, kc, vc, lwc = xs                       # (B, Cn, H, dh)
+        la = jnp.cumsum(lwc, axis=1)               # log A_i (inclusive)
+        la_prev = la - lwc                         # log A_{i-1}
+        a_prev = jnp.exp(la_prev)
+        a_end = jnp.exp(la[:, -1:])                # log A_C → (B,1,H,dh)
+        r_t = rc * a_prev                          # r~_i
+        k_t = kc * jnp.exp(-la)                    # k~_j = k_j / A_j
+        # inter-chunk: y_i += r~_i @ S0
+        y = jnp.einsum("bchd,bhde->bche", r_t, s)
+        # intra-chunk: strict lower triangular
+        scores = jnp.einsum("bchd,bkhd->bhck", r_t, k_t)
+        mask = jnp.tril(jnp.ones((Cn, Cn), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = y + jnp.einsum("bhck,bkhe->bche", scores, vc)
+        # diagonal (current-token bonus u)
+        diag = jnp.einsum("bchd,bchd->bch", rc, u[None, None] * kc)
+        y = y + diag[..., None] * vc
+        # state update: S' = diag(A_C) S + Σ_j (A_C/A_j ⊙ k_j)ᵀ v_j
+        kd = kc * jnp.exp(la[:, -1:] - la)         # (B,Cn,H,dh), ratios ≤ 1
+        s_new = a_end[:, 0, :, :, None] * s + jnp.einsum("bchd,bche->bhde",
+                                                         kd, vc)
+        return s_new, y
+
+    xs = (rs.transpose(1, 0, 2, 3, 4), ks_.transpose(1, 0, 2, 3, 4),
+          vs.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4))
+    s_fin, ys = jax.lax.scan(chunk_step, s0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return y, s_fin
+
+
+def _time_mix_seq(x, x_prev_last, lp, cfg, policy, impl, s0):
+    """Full-sequence time-mix.  x: (B,S,d); x_prev_last: (B,d) state."""
+    B, S, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    xs = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    proj = lambda name, mu: C.linear(_lerp(x, xs, lp[mu]), lp[name],
+                                     policy, impl)
+    r = C.constrain_heads(proj("wr", "mu_r").reshape(B, S, H, dh))
+    k = C.constrain_heads(proj("wk", "mu_k").reshape(B, S, H, dh))
+    v = C.constrain_heads(proj("wv", "mu_v").reshape(B, S, H, dh))
+    g = jax.nn.silu(proj("wg", "mu_g").astype(jnp.float32))
+    logw = C.constrain_heads(
+        _log_decay(_lerp(x, xs, lp["mu_w"]), lp, policy, impl)
+        .reshape(B, S, H, dh))
+    y, s_fin = _wkv_chunked(r, k, v, logw, lp["u"], s0)
+    y = C.group_norm(y.reshape(B, S, d).astype(x.dtype), lp["ln_x"], H)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    return C.linear(y, lp["wo"], policy, impl), x[:, -1], s_fin
+
+
+def _channel_mix_seq(x, x_prev_last, lp, policy, impl):
+    xs = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    kx = _lerp(x, xs, lp["mu_ck"])
+    rx = _lerp(x, xs, lp["mu_cr"])
+    kk = jnp.square(jax.nn.relu(
+        C.linear(kx, lp["ck"], policy, impl).astype(jnp.float32))).astype(x.dtype)
+    rr = jax.nn.sigmoid(C.linear(rx, lp["cr"], policy, impl).astype(jnp.float32))
+    return (rr * C.linear(kk, lp["cv"], policy, impl).astype(jnp.float32)
+            ).astype(x.dtype), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _forward_seq(params, cfg, tokens, policy, impl, state, remat=False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if policy is not None:
+        x = x.astype(policy.compute_dtype)
+
+    def body(xc, sl):
+        lp, tm_s, cm_s, wkv_s = sl
+        h = C.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        dx, tm_new, wkv_new = _time_mix_seq(h, tm_s, lp, cfg, policy, impl,
+                                            wkv_s)
+        xc = xc + dx
+        h2 = C.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        dx2, cm_new = _channel_mix_seq(h2, cm_s, lp, policy, impl)
+        xc = xc + dx2
+        return xc, (tm_new, cm_new, wkv_new)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (tm, cm, wkv) = jax.lax.scan(
+        body, x, (params["layers"], state.tm_shift, state.cm_shift,
+                  state.wkv))
+    new_state = RWKVState(tm_shift=tm, cm_shift=cm, wkv=wkv)
+    return C.rms_norm(x, params["final_norm"], cfg.norm_eps), new_state
+
+
+def hidden_states(params, cfg: ModelConfig, tokens, policy=None,
+                  impl="xla", remat=False) -> jax.Array:
+    state = init_state(cfg, tokens.shape[0])
+    h, _ = _forward_seq(params, cfg, tokens, policy, impl, state, remat)
+    return h
+
+
+def prefill(params, cfg: ModelConfig, policy: PrecisionPolicy, tokens,
+            state: RWKVState, impl="xla"):
+    h, state = _forward_seq(params, cfg, tokens, policy, impl, state)
+    from .transformer import lm_logits
+    return lm_logits(params, h[:, -1]), state
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state per token)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy, tokens,
+                state: RWKVState, pos=None, impl="xla"):
+    """tokens: (B, 1).  pos is unused (state is positional)."""
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0)
+    x = x.astype(policy.compute_dtype)
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    B = x.shape[0]
+
+    def body(xc, sl):
+        lp, tm_s, cm_s, wkv_s = sl
+        h = C.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        proj = lambda name, mu: C.linear(_lerp(h, tm_s, lp[mu]), lp[name],
+                                         policy, impl)
+        r = proj("wr", "mu_r").reshape(B, H, dh)
+        k = proj("wk", "mu_k").reshape(B, H, dh)
+        v = proj("wv", "mu_v").reshape(B, H, dh)
+        g = jax.nn.silu(proj("wg", "mu_g").astype(jnp.float32))
+        logw = _log_decay(_lerp(h, tm_s, lp["mu_w"]), lp, policy, impl) \
+            .reshape(B, H, dh)
+        u = lp["u"].astype(jnp.float32)
+        rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+        # y = r·(S + (u⊙k)ᵀ v);  S' = diag(w)·S + kᵀ v
+        kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+        y = jnp.einsum("bhd,bhde->bhe", rf, wkv_s + u[None, :, :, None] * kv)
+        wkv_new = jnp.exp(logw)[..., None] * wkv_s + kv
+        y = C.group_norm(y.reshape(B, d).astype(xc.dtype), lp["ln_x"], H)
+        y = (y.astype(jnp.float32) * g).astype(xc.dtype)
+        xc = xc + C.linear(y, lp["wo"], policy, impl)
+        tm_new = h
+        h2 = C.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        kx = _lerp(h2, cm_s, lp["mu_ck"])
+        rx = _lerp(h2, cm_s, lp["mu_cr"])
+        kk = jnp.square(jax.nn.relu(
+            C.linear(kx, lp["ck"], policy, impl).astype(jnp.float32))
+        ).astype(xc.dtype)
+        rr = jax.nn.sigmoid(C.linear(rx, lp["cr"], policy, impl)
+                            .astype(jnp.float32))
+        xc = xc + (rr * C.linear(kk, lp["cv"], policy, impl)
+                   .astype(jnp.float32)).astype(xc.dtype)
+        return xc, (tm_new, h2, wkv_new)
+
+    x, (tm, cm, wkv) = jax.lax.scan(
+        body, x, (params["layers"], state.tm_shift, state.cm_shift,
+                  state.wkv))
+    new_state = RWKVState(tm_shift=tm, cm_shift=cm, wkv=wkv)
+    from .transformer import lm_logits
+    h_last = C.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h_last), new_state

@@ -1,0 +1,2 @@
+from .analysis import (HW, RooflineTerms, analyze_compiled,  # noqa: F401
+                       collective_bytes_from_hlo, model_flops)

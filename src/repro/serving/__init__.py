@@ -1,0 +1,3 @@
+from .engine import Engine, quantize_params, percentile_stats  # noqa: F401
+from .request import Request, SamplingParams, Status           # noqa: F401
+from .scheduler import Scheduler                               # noqa: F401

@@ -1,0 +1,210 @@
+"""Serving engine: continuous batching over the mixed-precision model API.
+
+The engine owns one batched quantized KV cache (B = n_slots).  Per
+iteration it (i) admits waiting requests into free slots by running a
+padded single-slot prefill and splicing the resulting cache slice into the
+batch cache, then (ii) runs one batched decode step for all occupied slots
+with per-slot positions, samples per-slot tokens, and retires finished
+requests.  Prefill and decode are each a single jit'd function, compiled
+once per (prompt-bucket) shape.
+
+The KV cache stays in the policy's low-bit format end-to-end (the paper's
+attention pipeline); weights may be offline-packed (GEMM pipeline) by
+calling ``quantize_params`` before construction.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy, get_policy
+from repro.models import common as C
+from repro.models.registry import Model, build
+
+from .request import Request, SamplingParams, Status
+from .scheduler import Scheduler
+
+
+# Weights that are *not* GEMM operands (gather tables, positional tables,
+# tiny recurrence params) — never quantized, matching the paper's practice
+# of keeping embeddings/norms high precision.
+_SKIP_KEYS = ("embed", "dec_pos", "lm_head", "conv_w", "lam", "u", "w0",
+              "ln", "mu_", "b1", "b2", "g", "b")
+
+
+def quantize_params(params, policy: PrecisionPolicy):
+    """Offline stage: run every large 2D GEMM weight through hardware-aware
+    packing (paper §4.1).  Embeddings/norms/positions stay bf16."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    def skip(path) -> bool:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        return any(any(str(k).startswith(s) or str(k) == s
+                       for s in _SKIP_KEYS) for k in keys)
+
+    out = []
+    for path, p in flat:
+        if (not skip(path) and isinstance(p, jax.Array) and p.ndim >= 2
+                and p.dtype == jnp.bfloat16):
+            out.append(C.maybe_quantize(p, policy))
+        else:
+            out.append(p)
+    return treedef.unflatten(out)
+
+
+def _slot_insert(batch_cache, slot_cache, slot: jax.Array):
+    """Write a B=1 cache pytree into the batched cache at ``slot``.
+
+    Every cache leaf across all families carries batch at axis 1
+    (leaves are stacked (L, B, ...) by construction)."""
+    def ins(buf, val):
+        idx = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)) + \
+            tuple(jnp.zeros((), jnp.int32) for _ in range(buf.ndim - 2))
+        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+    return jax.tree.map(ins, batch_cache, slot_cache)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params=None,
+                 policy: Optional[PrecisionPolicy] = None,
+                 n_slots: int = 4, max_seq: int = 256,
+                 prompt_buckets: tuple = (32, 128),
+                 decode_impl: str = "fused", seed: int = 0):
+        self.cfg = cfg
+        self.policy = policy or get_policy()
+        self.model: Model = build(cfg)
+        key = jax.random.PRNGKey(seed)
+        raw = params if params is not None else self.model.init_params(key)
+        # offline GEMM pipeline stage (no-op for w16)
+        self.params = quantize_params(raw, self.policy)
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.prompt_buckets = tuple(sorted(prompt_buckets))
+        self.scheduler = Scheduler(n_slots, self.prompt_buckets[-1])
+        self.cache = self.model.init_cache(self.policy, n_slots, max_seq)
+        self.positions = jnp.zeros((n_slots,), jnp.int32)
+        self.last_tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.key = jax.random.fold_in(key, 1)
+        self._extra = self.model.extra_inputs(jax.random.fold_in(key, 2), 1)
+        self._next_rid = 0
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._insert = jax.jit(_slot_insert)
+        self.t0 = time.perf_counter()
+        self.iteration = 0
+
+    # -- jit'd inner functions -------------------------------------------
+
+    def _prefill_fn(self, params, tokens, cache1, **extra):
+        return self.model.prefill(params, self.policy, tokens, cache1,
+                                  **extra)
+
+    def _decode_fn(self, params, tokens, cache, pos, key, temp, top_k):
+        from . import sampler as S
+        logits, cache = self.model.decode_step(params, self.policy, tokens,
+                                               cache, pos)
+        nxt = S.sample(key, logits, temp, top_k)
+        return nxt, cache
+
+    # -- public API --------------------------------------------------------
+
+    def now(self) -> float:
+        return time.perf_counter() - self.t0
+
+    def submit(self, prompt: List[int],
+               params: Optional[SamplingParams] = None,
+               arrival_time: Optional[float] = None) -> Request:
+        req = Request(rid=self._next_rid, prompt=list(prompt),
+                      params=params or SamplingParams(),
+                      arrival_time=self.now() if arrival_time is None
+                      else arrival_time)
+        self._next_rid += 1
+        self.scheduler.add(req)
+        return req
+
+    def _bucket(self, n: int) -> int:
+        for b in self.prompt_buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds largest bucket")
+
+    def _do_prefill(self, req: Request) -> None:
+        P = self._bucket(len(req.prompt))
+        # left-pad to the bucket with token 0; positions are absolute so we
+        # instead right-align by prefilling the unpadded prompt into a
+        # right-padded buffer and treating pad tokens as prompt prefix of
+        # token 0 (harmless for synthetic serving; real deployments use
+        # ragged prefill).
+        toks = jnp.zeros((1, P), jnp.int32).at[0, :len(req.prompt)].set(
+            jnp.asarray(req.prompt, jnp.int32))
+        cache1 = self.model.init_cache(self.policy, 1, self.max_seq)
+        logits, cache1 = self._prefill(self.params, toks, cache1,
+                                       **self._extra)
+        # Prefill logits correspond to the last *bucket* position (pad), so
+        # we discard them and re-decode the last real token at its own
+        # position: the append overwrites that position's KV with identical
+        # values and the causal mask (kpos <= qpos) hides every stale pad
+        # entry — each pad slot is overwritten by a fresh decode append one
+        # step before it would become visible.
+        self.cache = self._insert(self.cache, cache1, req.slot)
+        self.positions = self.positions.at[req.slot].set(len(req.prompt) - 1)
+        self.last_tokens = self.last_tokens.at[req.slot, 0].set(
+            req.prompt[-1])
+
+    def step(self) -> List[Request]:
+        """One engine iteration: admit + prefill new, decode all, retire.
+
+        Returns requests that finished this iteration."""
+        self.iteration += 1
+        for req in self.scheduler.admit():
+            self._do_prefill(req)
+        running = self.scheduler.running()
+        finished: List[Request] = []
+        if not running:
+            return finished
+
+        temp = jnp.zeros((self.n_slots,), jnp.float32)
+        top_k = jnp.zeros((self.n_slots,), jnp.int32)
+        for r in running:
+            temp = temp.at[r.slot].set(r.params.temperature)
+            top_k = top_k.at[r.slot].set(r.params.top_k)
+
+        self.key, sub = jax.random.split(self.key)
+        nxt, self.cache = self._decode(self.params, self.last_tokens,
+                                       self.cache, self.positions, sub,
+                                       temp, top_k)
+        self.positions = self.positions + 1
+        self.last_tokens = nxt[:, None]
+        t = self.now()
+        nxt_host = jax.device_get(nxt)
+        for r in running:
+            tok = int(nxt_host[r.slot])
+            if r.first_token_time is None:
+                r.first_token_time = t
+            r.output.append(tok)
+            eos = r.params.eos_id is not None and tok == r.params.eos_id
+            room = int(self.positions[r.slot]) < self.max_seq - 1
+            if eos or len(r.output) >= r.params.max_new_tokens or not room:
+                self.scheduler.finish(r, t)
+                finished.append(r)
+        return finished
+
+    def run_until_idle(self, max_iters: int = 10_000) -> None:
+        for _ in range(max_iters):
+            if self.scheduler.idle:
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")
+
+
+def percentile_stats(vals: List[float]) -> Dict[str, float]:
+    import numpy as np
+    if not vals:
+        return {}
+    a = np.asarray(vals)
+    return {f"p{p}": float(np.percentile(a, p)) for p in (50, 90, 95, 99)}

@@ -1,0 +1,51 @@
+"""Request objects and lifecycle for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class Status(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0      # 0 → greedy
+    top_k: int = 0                # 0 → no top-k truncation
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    arrival_time: float = 0.0
+
+    # lifecycle (filled by the engine) ----------------------------------
+    status: Status = Status.WAITING
+    slot: int = -1
+    output: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None    # TTFT measurement
+    finish_time: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    @property
+    def done(self) -> bool:
+        return self.status == Status.FINISHED

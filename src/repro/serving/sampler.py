@@ -1,0 +1,32 @@
+"""Batched token sampling: greedy / temperature / top-k, vectorized per slot.
+
+All sampling parameters arrive as per-slot vectors so one jit'd function
+serves heterogeneous requests in the same continuous batch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key: jax.Array, logits: jax.Array, temperature: jax.Array,
+           top_k: jax.Array) -> jax.Array:
+    """logits: (B, V); temperature/top_k: (B,).  Returns (B,) int32.
+
+    temperature == 0 → greedy.  top_k == 0 → full distribution.
+    """
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # top-k mask: keep logits >= k-th largest (k==0 → keep all)
+    k_eff = jnp.where(top_k > 0, top_k, V)
+    sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]                 # desc
+    thresh = jnp.take_along_axis(
+        sorted_l, jnp.clip(k_eff[:, None] - 1, 0, V - 1), axis=1)  # (B,1)
+    masked = jnp.where(logits >= thresh, logits, -jnp.inf)
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, masked / temp, axis=-1) \
+        .astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

@@ -1,0 +1,58 @@
+"""Continuous-batching scheduler (Orca-style iteration-level scheduling).
+
+FCFS admission into a fixed pool of decode slots: whenever a slot frees,
+the oldest waiting request is prefilled into it; every engine iteration
+decodes all occupied slots together.  This is the serving discipline the
+paper's end-to-end evaluation (vLLM-style) assumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from .request import Request, Status
+
+
+@dataclasses.dataclass
+class Scheduler:
+    n_slots: int
+    max_prompt_len: int
+
+    def __post_init__(self):
+        self.waiting: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * self.n_slots
+
+    # -- queue ops -------------------------------------------------------
+
+    def add(self, req: Request) -> None:
+        assert len(req.prompt) <= self.max_prompt_len, \
+            f"prompt {len(req.prompt)} > max {self.max_prompt_len}"
+        self.waiting.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit(self) -> List[Request]:
+        """Move waiting requests into free slots; returns newly admitted."""
+        admitted = []
+        for i in self.free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.popleft()
+            req.slot, req.status = i, Status.RUNNING
+            self.slots[i] = req
+            admitted.append(req)
+        return admitted
+
+    def running(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def finish(self, req: Request, t: float) -> None:
+        req.status = Status.FINISHED
+        req.finish_time = t
+        self.slots[req.slot] = None
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and all(r is None for r in self.slots)

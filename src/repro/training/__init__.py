@@ -1,0 +1,1 @@
+from . import checkpoint, data, loop, optimizer  # noqa: F401

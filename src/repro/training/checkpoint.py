@@ -1,0 +1,67 @@
+"""Checkpointing: save/restore arbitrary pytrees (params + optimizer state)
+to a single .npz per step, with the treedef stored as a key-path index.
+
+Self-contained (no orbax offline); handles bf16 via a uint16 view.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+_FP8_TAGS = {"float8_e4m3fn": "__f8e4m3__", "float8_e5m2": "__f8e5m2__"}
+
+
+def _flatten(tree) -> Tuple[dict, list]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays, index = {}, []
+    for i, (path, leaf) in enumerate(flat):
+        key = f"leaf_{i}"
+        arr = np.asarray(leaf)
+        tag = ""
+        if arr.dtype == ml_dtypes.bfloat16:
+            arr = arr.view(np.uint16)
+            tag = _BF16_TAG
+        elif arr.dtype.name in _FP8_TAGS:
+            tag = _FP8_TAGS[arr.dtype.name]
+            arr = arr.view(np.uint8)
+        arrays[key] = arr
+        index.append({"key": key, "path": jax.tree_util.keystr(path),
+                      "tag": tag})
+    return arrays, index
+
+
+def save(path: str, tree: Any, step: int = 0) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, index = _flatten(tree)
+    np.savez(path, __index__=json.dumps({"step": step, "leaves": index}),
+             **arrays)
+    return path
+
+
+def restore(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (leaf order must match)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__index__"]))
+        leaves_meta = meta["leaves"]
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        assert len(flat_like) == len(leaves_meta), \
+            f"checkpoint has {len(leaves_meta)} leaves, model {len(flat_like)}"
+        out = []
+        for lm, ref in zip(leaves_meta, flat_like):
+            arr = z[lm["key"]]
+            if lm["tag"] == _BF16_TAG:
+                arr = arr.view(ml_dtypes.bfloat16)
+            elif lm["tag"] == "__f8e4m3__":
+                arr = arr.view(ml_dtypes.float8_e4m3fn)
+            elif lm["tag"] == "__f8e5m2__":
+                arr = arr.view(ml_dtypes.float8_e5m2)
+            assert arr.shape == ref.shape, (lm["path"], arr.shape, ref.shape)
+            out.append(jnp.asarray(arr))
+    return treedef.unflatten(out), meta["step"]

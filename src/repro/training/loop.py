@@ -1,0 +1,72 @@
+"""Training loop: jit'd train_step over the registry's uniform model API.
+
+Training always runs w16a16kv16 (the paper is inference-only; train_4k
+exercises the same model code in bf16 — DESIGN.md §4).  The returned
+``train_step`` is the exact function the multi-pod dry-run lowers under
+pjit, so what we smoke-test on CPU is what we shard on the mesh.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import get_policy
+from repro.models.registry import Model, build
+from repro.configs.base import ModelConfig
+
+from . import optimizer as O
+
+
+def make_train_step(model: Model, opt: O.Optimizer,
+                    remat: bool = False) -> Callable:
+    policy = get_policy("w16a16kv16")
+
+    def train_step(params, opt_state, tokens, targets, **extra):
+        def loss_fn(p):
+            return model.loss_fn(p, policy, tokens, targets, remat=remat,
+                                 **extra)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def train(cfg: ModelConfig, n_steps: int = 100, batch: int = 8,
+          seq: int = 128, lr: float = 3e-4, seed: int = 0,
+          log_every: int = 10, remat: bool = False,
+          checkpoint_path: Optional[str] = None,
+          checkpoint_every: int = 0) -> Dict[str, Any]:
+    """Single-host training driver (the distributed one is launch/train.py)."""
+    from . import data as D
+    from . import checkpoint as CKPT
+
+    model = build(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key)
+    opt = O.for_config(cfg, lr=lr, total_steps=n_steps)
+    opt_state = opt.init(params)
+    extra = model.extra_inputs(jax.random.fold_in(key, 7), batch)
+    step_fn = jax.jit(make_train_step(model, opt, remat=remat))
+
+    losses = []
+    t0 = time.perf_counter()
+    for i, (toks, tgts) in enumerate(
+            D.batches(cfg.vocab, batch, seq, n_steps, seed)):
+        params, opt_state, loss = step_fn(params, opt_state, toks, tgts,
+                                          **extra)
+        if i % log_every == 0 or i == n_steps - 1:
+            lv = float(loss)
+            losses.append((i, lv))
+            print(f"step {i:5d}  loss {lv:.4f}")
+        if checkpoint_path and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            CKPT.save(checkpoint_path, {"params": params, "opt": opt_state},
+                      step=i + 1)
+    dt = time.perf_counter() - t0
+    return {"params": params, "opt_state": opt_state, "losses": losses,
+            "wall_s": dt, "tokens_per_s": n_steps * batch * seq / dt}

@@ -1,0 +1,136 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+No external deps (optax is not installed offline) — both are implemented
+as (init, update) pairs over arbitrary pytrees, jit/pjit-safe.
+
+Adafactor is used for arctic-480b / mistral-large-123b (cfg.big_model):
+AdamW state is 12 B/param which exceeds the 16 GB/chip HBM budget at 256
+chips for ≥123B params; adafactor's factored second moment is ~4.1 B/param
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]   # (grads, state, params)
+
+
+def _tree_zeros_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          warmup: int = 100, total_steps: int = 10_000) -> Optimizer:
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total_steps - warmup),
+                        0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.minimum(warm, 1.0) * jnp.maximum(cos, 0.1)
+
+    def init(params):
+        return {"mu": _tree_zeros_f32(params), "nu": _tree_zeros_f32(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = schedule(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu_n = b1 * mu + (1 - b1) * g
+            nu_n = b2 * nu + (1 - b2) * g * g
+            upd_ = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + eps)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * upd_).astype(p.dtype), \
+                mu_n, nu_n
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moment, no first moment
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps1: float = 1e-30,
+              eps2: float = 1e-3, clip_threshold: float = 1.0) -> Optimizer:
+    def init(params):
+        def per(p):
+            if p.ndim >= 2:
+                # factor over the two trailing dims; leading dims (layer
+                # stacks, expert stacks) are kept — state (..., K) + (..., N)
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"m": jax.tree.map(per, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def per(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u = g / (jnp.sqrt(vr / jnp.maximum(denom, eps1))[..., None]
+                         * jnp.sqrt(vc)[..., None, :] + eps1)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + eps1)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(
+                p.astype(jnp.float32) ** 2)))
+            new_p = (p.astype(jnp.float32) - lr * scale * u).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["m"])
+        outs = [per(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_m = treedef.unflatten([o[1] for o in outs])
+        return new_p, {"m": new_m, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def for_config(cfg, lr: float = 3e-4, **kw) -> Optimizer:
+    """Paper-scale default: adafactor for big_model archs, adamw otherwise."""
+    if getattr(cfg, "big_model", False):
+        return adafactor(lr=lr)
+    return adamw(lr=lr, **kw)

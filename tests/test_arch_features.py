@@ -1,0 +1,184 @@
+"""Architecture-specific feature correctness: gemma3's 5:1 local:global
+window pattern, chatglm's partial RoPE, whisper's cross-attention cache,
+recurrentgemma's block pattern, rwkv decode/chunked equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced
+from repro.core.precision import get_policy
+from repro.models import common as C
+from repro.models import rwkv6 as R
+from repro.models import transformer as T
+from repro.models.registry import build
+
+POL = get_policy("w16a16kv16")
+
+
+class TestGemma3Windows:
+    def test_layer_window_pattern(self):
+        """Every local_global_period-th layer is global, others local."""
+        cfg = get_config("gemma3-1b")
+        wins = [int(T.layer_window(cfg, i)) for i in range(cfg.n_layers)]
+        for i, w in enumerate(wins):
+            if (i % 6) == 5:
+                assert w == T.BIG_WINDOW, i       # global layer
+            else:
+                assert w == 1024, i               # sliding window
+
+    def test_window_restricts_attention(self, key):
+        """A token beyond the window cannot influence a local layer."""
+        cfg = dataclasses.replace(get_reduced("gemma3-1b"),
+                                  local_global_period=0, window=4)
+        model = build(cfg)
+        params = model.init_params(key)
+        toks = jax.random.randint(key, (1, 12), 1, cfg.vocab)
+        h1 = model.hidden_states(params, toks, policy=POL)
+        # perturb token 0 — outside every later position's window of 4
+        toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 1) % cfg.vocab)
+        h2 = model.hidden_states(params, toks2, policy=POL)
+        # positions ≥ 5 see identical context (token 0 out of window at
+        # every layer; depth-2 receptive field = 2*4)
+        d = np.abs(np.asarray(h1 - h2, np.float32))[0]
+        assert d[-1].max() < 1e-3, d[-1].max()
+
+    def test_global_layer_sees_everything(self, key):
+        cfg = dataclasses.replace(get_reduced("gemma3-1b"),
+                                  local_global_period=0, window=None)
+        model = build(cfg)
+        params = model.init_params(key)
+        toks = jax.random.randint(key, (1, 12), 1, cfg.vocab)
+        h1 = model.hidden_states(params, toks, policy=POL)
+        toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 1) % cfg.vocab)
+        h2 = model.hidden_states(params, toks2, policy=POL)
+        d = np.abs(np.asarray(h1 - h2, np.float32))[0]
+        assert d[-1].max() > 1e-4     # token 0 influences the last position
+
+
+class TestChatGLMPartialRope:
+    def test_rotary_pct_half(self, key):
+        """chatglm rotates only the leading half of head_dim."""
+        x = jax.random.normal(key, (1, 4, 2, 8)).astype(jnp.bfloat16)
+        pos = jnp.arange(4)
+        out = C.apply_rope(x, pos, rotary_pct=0.5)
+        # trailing half untouched
+        np.testing.assert_array_equal(np.asarray(out[..., 4:]),
+                                      np.asarray(x[..., 4:]))
+        assert not np.array_equal(np.asarray(out[..., :4]),
+                                  np.asarray(x[..., :4]))
+
+    def test_full_rope_rotates_all(self, key):
+        x = jax.random.normal(key, (1, 4, 2, 8)).astype(jnp.bfloat16)
+        out = C.apply_rope(x, jnp.arange(4), rotary_pct=1.0)
+        assert not np.array_equal(np.asarray(out[..., 4:]),
+                                  np.asarray(x[..., 4:]))
+
+    def test_rope_position_zero_identity(self, key):
+        x = jax.random.normal(key, (1, 1, 2, 8)).astype(jnp.bfloat16)
+        out = C.apply_rope(x, jnp.zeros((1,), jnp.int32))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(x, np.float32), atol=1e-2)
+
+
+class TestWhisperCross:
+    def test_cross_cache_static_across_decode(self, key):
+        """Encoder KV is computed once at prefill and identical afterward."""
+        cfg = get_reduced("whisper-tiny")
+        model = build(cfg)
+        params = model.init_params(key)
+        extra = model.extra_inputs(key, 1)
+        toks = jax.random.randint(key, (1, 4), 1, cfg.vocab)
+        cache = model.init_cache(POL, 1, 16)
+        _, cache1 = model.prefill(params, POL, toks, cache, **extra)
+        _, cache2 = model.decode_step(params, POL, toks[:, :1], cache1, 4)
+        np.testing.assert_array_equal(np.asarray(cache1.cross_kv.k),
+                                      np.asarray(cache2.cross_kv.k))
+
+    def test_encoder_output_affects_decoder(self, key):
+        cfg = get_reduced("whisper-tiny")
+        model = build(cfg)
+        params = model.init_params(key)
+        toks = jax.random.randint(key, (1, 4), 1, cfg.vocab)
+        f1 = model.extra_inputs(key, 1)
+        f2 = model.extra_inputs(jax.random.fold_in(key, 5), 1)
+        c1 = model.init_cache(POL, 1, 16)
+        c2 = model.init_cache(POL, 1, 16)
+        l1, _ = model.prefill(params, POL, toks, c1, **f1)
+        l2, _ = model.prefill(params, POL, toks, c2, **f2)
+        assert np.abs(np.asarray(l1 - l2, np.float32)).max() > 1e-3
+
+
+class TestRWKVForms:
+    def test_chunked_equals_stepwise(self, key):
+        """The chunked GLA prefill equals token-by-token decode states."""
+        cfg = get_reduced("rwkv6-7b")
+        model = build(cfg)
+        params = model.init_params(key)
+        toks = jax.random.randint(key, (1, 8), 1, cfg.vocab)
+        # prefill all 8
+        st_a = model.init_cache(POL, 1, 16)
+        logits_a, st_a = model.prefill(params, POL, toks, st_a)
+        # decode token-by-token
+        st_b = model.init_cache(POL, 1, 16)
+        for t in range(8):
+            logits_b, st_b = model.decode_step(params, POL,
+                                               toks[:, t:t + 1], st_b, t)
+        wa = np.asarray(st_a.wkv, np.float32)
+        wb = np.asarray(st_b.wkv, np.float32)
+        # chunked GLA vs sequential recurrence differ by bf16 association
+        # order; compare at matrix scale (near-zero entries fail
+        # elementwise rtol vacuously)
+        assert np.abs(wa - wb).max() / max(np.abs(wa).max(), 1e-9) < 0.02
+        a = np.asarray(logits_a, np.float32)
+        b = np.asarray(logits_b, np.float32)
+        assert np.abs(a - b).max() < 0.1
+
+
+class TestRecurrentGemmaPattern:
+    def test_block_counts(self):
+        from repro.models.rglru import _counts
+        cfg = get_config("recurrentgemma-2b")
+        n_super, n_rec, n_trail = _counts(cfg)
+        assert n_super == 8 and n_trail == 2
+        assert n_rec == 18                      # 8×2 + 2
+        assert n_super + n_rec == cfg.n_layers  # 26 total blocks
+
+    def test_lru_state_bounded(self, key):
+        """RG-LRU state norm stays bounded over many steps (|a| < 1)."""
+        cfg = get_reduced("recurrentgemma-2b")
+        model = build(cfg)
+        params = model.init_params(key)
+        cache = model.init_cache(POL, 1, 64)
+        tok = jax.random.randint(key, (1, 1), 1, cfg.vocab)
+        norms = []
+        for t in range(20):
+            _, cache = model.decode_step(params, POL, tok, cache, t)
+            norms.append(float(jnp.max(jnp.abs(cache.h))))
+        assert norms[-1] < 100.0
+        assert all(np.isfinite(norms))
+
+
+class TestLongContextSmoke:
+    """Reduced-scale long_500k analogues on CPU: sub-quadratic archs decode
+    against a long (reduced) context without materializing O(S²)."""
+
+    @pytest.mark.parametrize("arch", ["rwkv6-7b", "recurrentgemma-2b",
+                                      "gemma3-1b"])
+    def test_long_decode(self, arch, key):
+        cfg = get_reduced(arch)
+        model = build(cfg)
+        params = model.init_params(key)
+        S = 2048                       # reduced stand-in for 524288
+        cache = model.init_cache(POL, 1, S)
+        # prefill a short prompt, then decode at a FAR position (the
+        # recurrent/window state path, not a full prefill of S tokens)
+        toks = jax.random.randint(key, (1, 8), 1, cfg.vocab)
+        _, cache = model.prefill(params, POL, toks, cache)
+        tok = toks[:, :1]
+        for pos in (8, S // 2, S - 2):
+            logits, cache = model.decode_step(params, POL, tok, cache, pos)
+            assert bool(jnp.all(jnp.isfinite(
+                logits.astype(jnp.float32)))), (arch, pos)

@@ -1,0 +1,126 @@
+"""Core attention paths: flash vs naive prefill, decode impl equivalence,
+cross attention, sliding windows, the dequant-first baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as A
+from repro.core import kvcache as KV
+from repro.core.precision import get_policy
+
+
+def _qkv(key, B=2, S=128, H=4, Hkv=2, D=64):
+    mk = lambda i, h: jax.random.normal(jax.random.fold_in(key, i),
+                                        (B, S, h, D)).astype(jnp.bfloat16)
+    return mk(0, H), mk(1, Hkv), mk(2, Hkv)
+
+
+class TestPrefill:
+    def test_flash_matches_naive(self, key):
+        q, k, v = _qkv(key)
+        naive = A.prefill_attention(q, k, v)
+        flash = A.flash_attention(q, k, v, q_chunk=32, kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(flash, np.float32),
+                                   np.asarray(naive, np.float32),
+                                   rtol=0.03, atol=0.02)
+
+    def test_flash_window(self, key):
+        q, k, v = _qkv(key)
+        naive = A.prefill_attention(q, k, v, window=17)
+        flash = A.flash_attention(q, k, v, window=17, q_chunk=32,
+                                  kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(flash, np.float32),
+                                   np.asarray(naive, np.float32),
+                                   rtol=0.03, atol=0.02)
+
+    def test_flash_ragged_chunks(self, key):
+        q, k, v = _qkv(key, S=100)          # not a chunk multiple
+        naive = A.prefill_attention(q, k, v)
+        flash = A.flash_attention(q, k, v, q_chunk=32, kv_chunk=64)
+        np.testing.assert_allclose(np.asarray(flash, np.float32),
+                                   np.asarray(naive, np.float32),
+                                   rtol=0.03, atol=0.02)
+
+    def test_flash_noncausal(self, key):
+        q, k, v = _qkv(key, S=64)
+        naive = A.prefill_attention(q, k, v, causal=False)
+        flash = A.flash_attention(q, k, v, causal=False, q_chunk=32,
+                                  kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(flash, np.float32),
+                                   np.asarray(naive, np.float32),
+                                   rtol=0.03, atol=0.02)
+
+    def test_flash_cross_qk_lengths(self, key):
+        q, _, _ = _qkv(key, S=48)
+        _, k, v = _qkv(jax.random.fold_in(key, 9), S=96)
+        out = A.flash_attention(q, k, v, causal=False, q_chunk=16,
+                                kv_chunk=32)
+        assert out.shape == q.shape
+
+
+class TestDecode:
+    @pytest.mark.parametrize("fmt", ["kv4", "kv8", "kv16"])
+    def test_fused_vs_dequant_first(self, key, fmt):
+        spec = get_policy(f"w4a16{fmt}").kv
+        B, S, H, Hkv, D = 2, 128, 4, 2, 64
+        cache = KV.init_cache(B, S, Hkv, D, spec)
+        _, k, v = _qkv(key, B=B, S=S, H=H, Hkv=Hkv, D=D)
+        cache = KV.append(cache, k, v, 0, spec)
+        q = jax.random.normal(jax.random.fold_in(key, 3), (B, 1, H, D)) \
+            .astype(jnp.bfloat16)
+        fused = A.decode_attention(q, cache, spec, 64, impl="fused")
+        base = A.decode_attention(q, cache, spec, 64, impl="dequant_first")
+        np.testing.assert_allclose(np.asarray(fused, np.float32),
+                                   np.asarray(base, np.float32),
+                                   rtol=0.05, atol=0.03)
+
+    def test_per_slot_positions(self, key):
+        """Vector pos: each batch slot attends its own prefix length."""
+        spec = get_policy("w4a16kv8").kv
+        B, S, H, Hkv, D = 3, 64, 4, 2, 32
+        cache = KV.init_cache(B, S, Hkv, D, spec)
+        _, k, v = _qkv(key, B=B, S=S, H=H, Hkv=Hkv, D=D)
+        cache = KV.append(cache, k, v, 0, spec)
+        q = jax.random.normal(jax.random.fold_in(key, 3), (B, 1, H, D)) \
+            .astype(jnp.bfloat16)
+        pos = jnp.array([5, 20, 63], jnp.int32)
+        out_vec = A.decode_attention(q, cache, spec, pos)
+        for b in range(B):
+            out_b = A.decode_attention(q[b:b + 1],
+                                       jax.tree.map(lambda a: a[b:b + 1],
+                                                    cache),
+                                       spec, int(pos[b]))
+            np.testing.assert_allclose(
+                np.asarray(out_vec[b], np.float32),
+                np.asarray(out_b[0], np.float32), rtol=0.02, atol=0.01)
+
+    def test_decode_matches_prefill_row(self, key):
+        """Decode at position t == row t of full prefill attention."""
+        spec = get_policy("w4a16kv16").kv     # kv16: exact comparison
+        B, S, H, Hkv, D = 1, 32, 4, 2, 32
+        q, k, v = _qkv(key, B=B, S=S, H=H, Hkv=Hkv, D=D)
+        full = A.prefill_attention(q, k, v)
+        cache = KV.init_cache(B, S, Hkv, D, spec)
+        cache = KV.append(cache, k, v, 0, spec)
+        t = 17
+        out = A.decode_attention(q[:, t:t + 1], cache, spec, t)
+        np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   rtol=0.03, atol=0.02)
+
+
+class TestCrossAttention:
+    def test_matches_flash(self, key):
+        spec = get_policy("w4a16kv16").kv
+        B, Se, H, Hkv, D = 2, 48, 4, 4, 32
+        q = jax.random.normal(key, (B, 3, H, D)).astype(jnp.bfloat16)
+        _, k, v = _qkv(jax.random.fold_in(key, 1), B=B, S=Se, H=H,
+                       Hkv=Hkv, D=D)
+        cache = KV.init_cache(B, Se, Hkv, D, spec)
+        cache = KV.append(cache, k, v, 0, spec)
+        out = A.cross_attention(q, cache, spec)
+        ref = A.flash_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=0.03, atol=0.02)

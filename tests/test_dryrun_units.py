@@ -1,0 +1,99 @@
+"""Dry-run building blocks that don't need a compile: pair/skip listing,
+abstract step construction (specs + shardings) for every kind, policies.
+
+NOTE: build_lowerable is exercised on a (1,1) mesh — structure only; the
+512-device lower+compile itself is the launch-level deliverable
+(results/dryrun_*.jsonl), far too slow for unit tests.
+"""
+import jax
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.dryrun import SKIPS, build_lowerable, list_pairs
+from repro.launch.mesh import data_axes, make_production_mesh
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class TestPairListing:
+    def test_40_pairs(self):
+        pairs = list_pairs()
+        assert len(pairs) == len(ARCHS) * len(SHAPES) == 40
+
+    def test_skips_are_long500k_only(self):
+        assert len(SKIPS) == 7
+        assert all(shape == "long_500k" for _, shape in SKIPS)
+        runnable = [p for p in list_pairs() if p[2] is None]
+        assert len(runnable) == 33
+
+    def test_subquadratic_archs_run_long(self):
+        from repro.configs import get_config
+        for a in ARCHS:
+            cfg = get_config(a)
+            skipped = (a, "long_500k") in SKIPS
+            assert skipped != cfg.sub_quadratic, a
+
+
+class TestBuildLowerable:
+    @pytest.mark.parametrize("arch,shape", [
+        ("smollm-360m", "train_4k"),
+        ("smollm-360m", "prefill_32k"),
+        ("smollm-360m", "decode_32k"),
+        ("rwkv6-7b", "decode_32k"),
+        ("whisper-tiny", "prefill_32k"),
+        ("internvl2-2b", "train_4k"),
+        ("recurrentgemma-2b", "long_500k"),
+    ])
+    def test_specs_and_shardings_align(self, arch, shape):
+        mesh = _mesh11()
+        fn, args, shardings, meta = build_lowerable(arch, shape, mesh)
+        assert len(args) == len(shardings)
+        for a, s in zip(args, shardings):
+            assert jax.tree_util.tree_structure(a) == \
+                jax.tree_util.tree_structure(s), (arch, shape)
+        assert meta["kind"] in ("train", "prefill", "decode")
+        # every arg leaf is a ShapeDtypeStruct (zero allocation)
+        for leaf in jax.tree.leaves(args):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+
+    def test_decode_is_one_token(self):
+        mesh = _mesh11()
+        fn, args, shardings, meta = build_lowerable(
+            "chatglm3-6b", "decode_32k", mesh)
+        tok_spec = args[1]
+        assert tok_spec.shape == (128, 1)        # ONE new token per slot
+        cache = args[2]
+        assert cache.k.shape[2] == 32_768        # full-length KV cache
+
+    def test_train_uses_bf16_params(self):
+        import jax.numpy as jnp
+        mesh = _mesh11()
+        fn, args, shardings, meta = build_lowerable(
+            "smollm-360m", "train_4k", mesh)
+        assert meta["policy"] == "w16a16kv16"
+        from repro.core.packing import PackedWeight
+        assert not any(isinstance(x, PackedWeight)
+                       for x in jax.tree.leaves(
+                           args[0], is_leaf=lambda x: isinstance(
+                               x, PackedWeight)))
+
+    def test_serving_uses_packed_weights(self):
+        mesh = _mesh11()
+        fn, args, shardings, meta = build_lowerable(
+            "smollm-360m", "decode_32k", mesh)
+        from repro.core.packing import PackedWeight
+        packed = [x for x in jax.tree.leaves(
+            args[0], is_leaf=lambda x: isinstance(x, PackedWeight))
+            if isinstance(x, PackedWeight)]
+        assert packed, "serving params must be offline-packed"
+
+
+class TestMesh:
+    def test_single_pod(self):
+        # only structure checks are possible on one real device; the
+        # production shapes are validated by the dry-run itself
+        assert data_axes.__call__ is not None
+        mesh = _mesh11()
+        assert data_axes(mesh) == ("data",)

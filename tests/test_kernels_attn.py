@@ -1,0 +1,87 @@
+"""Pallas decode-attention kernel (quantized KV) vs the pure-jnp oracle.
+
+Sweeps sequence lengths, block sizes, KV formats (int4/int8/fp8/bf16),
+GQA group sizes, window sizes and position edge cases — interpret mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kvcache as KV
+from repro.core.precision import get_policy
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _cache(key, B, S, Hkv, D, spec, fill=None):
+    cache = KV.init_cache(B, S, Hkv, D, spec)
+    fill = S if fill is None else fill
+    k = jax.random.normal(key, (B, fill, Hkv, D), jnp.float32) \
+        .astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, fill, Hkv, D),
+                          jnp.float32).astype(jnp.bfloat16)
+    return KV.append(cache, k, v, 0, spec)
+
+
+def _check(key, B=2, S=512, H=8, Hkv=2, D=128, fmt="kv8", pos=300,
+           window=None, block_s=256, rtol=0.04, atol=0.02):
+    spec = get_policy(f"w4a16{fmt}").kv
+    cache = _cache(key, B, S, Hkv, D, spec)
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, H, D),
+                          jnp.float32).astype(jnp.bfloat16)
+    out = kops.kvattn_decode(q, cache, spec, pos, window=window,
+                             block_s=block_s)
+    ref = kref.kvattn_ref(q, cache, spec, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+class TestKVAttnKernel:
+    @pytest.mark.parametrize("fmt", ["kv4", "kv8", "kvfp8", "kv16"])
+    def test_formats(self, key, fmt):
+        _check(key, fmt=fmt, atol=0.08 if fmt == "kv4" else 0.02)
+
+    @pytest.mark.parametrize("S,block_s", [(256, 64), (512, 128),
+                                           (1024, 256), (512, 512)])
+    def test_seq_blocks(self, key, S, block_s):
+        _check(key, S=S, block_s=block_s, pos=S // 2 + 3)
+
+    @pytest.mark.parametrize("H,Hkv", [(8, 8), (8, 2), (16, 1), (15, 5)])
+    def test_gqa_groups(self, key, H, Hkv):
+        _check(key, H=H, Hkv=Hkv, D=64)
+
+    @pytest.mark.parametrize("pos", [0, 1, 255, 256, 511])
+    def test_position_edges(self, key, pos):
+        _check(key, pos=pos)
+
+    @pytest.mark.parametrize("window", [64, 256])
+    def test_sliding_window(self, key, window):
+        _check(key, window=window, pos=400)
+
+    def test_head_dim_64(self, key):
+        _check(key, D=64)
+
+    def test_batch_one(self, key):
+        _check(key, B=1)
+
+    def test_scaled_values(self, key):
+        """Large-magnitude KV exercise the per-(token, head) scales."""
+        spec = get_policy("w4a16kv8").kv
+        B, S, Hkv, H, D = 1, 256, 2, 4, 64
+        cache = KV.init_cache(B, S, Hkv, D, spec)
+        k = (jax.random.normal(key, (B, S, Hkv, D)) * 50).astype(jnp.bfloat16)
+        v = (jax.random.normal(jax.random.fold_in(key, 1),
+                               (B, S, Hkv, D)) * 0.02).astype(jnp.bfloat16)
+        cache = KV.append(cache, k, v, 0, spec)
+        q = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, H, D)) \
+            .astype(jnp.bfloat16)
+        out = kops.kvattn_decode(q, cache, spec, 128)
+        ref = kref.kvattn_ref(q, cache, spec, 128)
+        # extreme score magnitudes make the softmax near-argmax; bf16
+        # score rounding can shift mass between near-ties — a wrong
+        # per-(token, head) scale would instead err by ~50×.
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=0.1, atol=0.01)

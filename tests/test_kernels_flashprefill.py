@@ -1,0 +1,54 @@
+"""Pallas fused flash-prefill kernel vs the pure-jnp oracle — shape /
+block / GQA / window / padding sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _qkv(key, B, S, H, Hkv, D):
+    mk = lambda i, h: (jax.random.normal(jax.random.fold_in(key, i),
+                                         (B, S, h, D)) * 0.5) \
+        .astype(jnp.bfloat16)
+    return mk(0, H), mk(1, Hkv), mk(2, Hkv)
+
+
+def _check(key, B=1, S=256, H=4, Hkv=2, D=64, causal=True, window=None,
+           bq=128, bk=128):
+    q, k, v = _qkv(key, B, S, H, Hkv, D)
+    out = kops.flash_prefill_attention(q, k, v, causal=causal,
+                                       window=window, block_q=bq,
+                                       block_k=bk)
+    ref = kref.flash_prefill_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.05, atol=0.03)
+
+
+class TestFlashPrefillKernel:
+    @pytest.mark.parametrize("S,bq,bk", [(256, 128, 128), (512, 256, 256),
+                                         (512, 128, 256), (128, 128, 128)])
+    def test_blocks(self, key, S, bq, bk):
+        _check(key, S=S, bq=bq, bk=bk)
+
+    @pytest.mark.parametrize("H,Hkv", [(4, 4), (8, 2), (6, 1)])
+    def test_gqa(self, key, H, Hkv):
+        _check(key, H=H, Hkv=Hkv)
+
+    def test_noncausal(self, key):
+        _check(key, causal=False)
+
+    def test_window(self, key):
+        _check(key, S=512, window=100, bq=128, bk=128)
+
+    def test_ragged_padding(self, key):
+        _check(key, S=300, bq=128, bk=128)     # pads to 384
+
+    def test_head_dim_128(self, key):
+        _check(key, D=128)
+
+    def test_batch(self, key):
+        _check(key, B=3)

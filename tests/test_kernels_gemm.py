@@ -1,0 +1,122 @@
+"""Pallas mixed-precision GEMM kernel vs the pure-jnp oracle (ref.py).
+
+Sweeps shapes, dtypes (W4/W8), group sizes and block_m — every case runs
+the kernel body in interpret mode (bit-exact Python execution on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing as PK
+from repro.core.precision import get_policy
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.mpgemm import mpgemm_2d
+
+
+def _mk(key, M, K, N, bits, group=128, bk=128, bn=128):
+    x = (jax.random.normal(key, (M, K), jnp.float32) * 0.5) \
+        .astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N),
+                          jnp.float32) * 0.2
+    p = PK.pack_weight(w, bits=bits, group=group, block_k=bk, block_n=bn)
+    return x, p
+
+
+def _check(x, p, block_m=128, rtol=0.05):
+    y = mpgemm_2d(x, p.data, p.scales.astype(jnp.float32), bits=p.bits,
+                  group=p.group, block_m=block_m, interpret=True)
+    y_ref = kref.mpgemm_ref(x, p)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=rtol, atol=0.1 * float(jnp.std(y_ref.astype(jnp.float32))))
+
+
+class TestMPGemmKernel:
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("MKN", [(128, 256, 128), (64, 128, 256),
+                                     (256, 512, 384)])
+    def test_shapes(self, key, bits, MKN):
+        M, K, N = MKN
+        x, p = _mk(key, M, K, N, bits)
+        _check(x, p, block_m=min(128, M))
+
+    @pytest.mark.parametrize("group", [64, 128])
+    def test_group_sizes(self, key, group):
+        # kernel requires group == block_k (packer default pairing)
+        x, p = _mk(key, 64, 256, 128, bits=4, group=group, bk=group)
+        _check(x, p, block_m=64)
+
+    @pytest.mark.parametrize("block_m", [8, 32, 128])
+    def test_block_m_sweep(self, key, block_m):
+        x, p = _mk(key, 128, 128, 128, bits=4)
+        _check(x, p, block_m=block_m)
+
+    def test_ragged_m_via_wrapper(self, key):
+        """ops.mpgemm handles M not divisible by 128 (batch=leading dims)."""
+        policy = get_policy("w4a16kv8")
+        x = (jax.random.normal(key, (3, 7, 256), jnp.float32) * 0.5) \
+            .astype(jnp.bfloat16)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (256, 128),
+                              jnp.float32) * 0.2
+        p = PK.pack_weight(w, bits=4)
+        y = kops.mpgemm(x, p, policy)
+        y_ref = kref.mpgemm_ref(x.reshape(21, 256), p).reshape(3, 7, 128)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=0.05, atol=0.15)
+
+    def test_small_blocks(self, key):
+        x, p = _mk(key, 32, 128, 192, bits=4, bk=64, bn=64, group=64)
+        _check(x, p, block_m=32)
+
+    def test_int8_values_exact(self, key):
+        """With unit scales and integer activations the kernel is exact."""
+        K, N, M = 128, 128, 16
+        q = jax.random.randint(key, (K, N), -8, 8, jnp.int8)
+        scales = jnp.ones((1, N), jnp.float32)
+        p = PK.pack_prequantized(q, scales, bits=4, group=128)
+        x = jax.random.randint(jax.random.fold_in(key, 1), (M, K),
+                               -2, 3, jnp.int32).astype(jnp.bfloat16)
+        y = mpgemm_2d(x, p.data, p.scales, bits=4, group=128, block_m=M,
+                      interpret=True, out_dtype=jnp.float32)
+        y_exact = x.astype(jnp.float32) @ q.astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_exact),
+                                   rtol=0, atol=1e-5)
+
+
+class TestMPGemmInt8Kernel:
+    """W4A8/W8A8 in-kernel int8-MXU mainloop vs the XLA int8 path."""
+
+    @pytest.mark.parametrize("fmt", ["w4a8kv16", "w8a8kv16"])
+    def test_matches_xla_int8(self, key, fmt):
+        from repro.core.gemm import mp_matmul
+        policy = get_policy(fmt)
+        x = (jax.random.normal(key, (32, 256), jnp.float32) * 0.5) \
+            .astype(jnp.bfloat16)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (256, 128),
+                              jnp.float32) * 0.2
+        p = PK.pack_weight(w, bits=policy.weights.bits, group=128)
+        y_k = kops.mpgemm(x, p, policy, block_m=32)
+        y_x = mp_matmul(x, p, policy, impl="xla")
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_x, np.float32),
+                                   rtol=0.05, atol=0.05)
+
+    def test_near_exact_integer_case(self, key):
+        """Integer weights + unit scales: only the per-token activation
+        quantization (127 levels over the token's absmax) perturbs the
+        result — error bounded by K · |q|max · absmax/254."""
+        policy = get_policy("w8a8kv16")
+        K, N, M = 128, 128, 16
+        q = jax.random.randint(key, (K, N), -8, 8, jnp.int8)
+        p = PK.pack_prequantized(q, jnp.ones((1, N), jnp.float32), bits=8,
+                                 group=128)
+        x = jax.random.randint(jax.random.fold_in(key, 1), (M, K),
+                               -3, 4, jnp.int32).astype(jnp.bfloat16)
+        y = kops.mpgemm(x, p, policy, block_m=M)
+        y_exact = x.astype(jnp.float32) @ q.astype(jnp.float32)
+        bound = K * 8 * (3.0 / 254.0) + 1e-3          # ≈ 12.1
+        err = np.abs(np.asarray(y, np.float32) - np.asarray(y_exact))
+        assert err.max() <= bound, err.max()

@@ -1,0 +1,105 @@
+"""Hardware-aware weight packing (§4.1): the offline pack must be a pure,
+lossless permutation of the quantized values, and the packed GEMM paths
+must agree with the dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing as PK
+from repro.core import quantize as Q
+from repro.core.gemm import mp_matmul, dense_matmul
+from repro.core.precision import get_policy
+
+
+class TestPackPermutation:
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("kn", [(256, 256), (128, 384), (512, 128)])
+    def test_unpack_inverts_pack(self, key, bits, kn):
+        """unpack(pack(q)) == q exactly for pre-quantized ints (the layout
+        transform is a pure permutation); end-to-end pack_weight matches
+        the direct quantizer to float tolerance (jit fusion may differ by
+        1 ulp at round boundaries)."""
+        K, N = kn
+        w = jax.random.normal(key, (K, N), jnp.float32)
+        q_direct, scales = Q.quantize_weight_grouped(w, bits=bits, group=128)
+        p_exact = PK.pack_prequantized(q_direct, scales, bits=bits, group=128)
+        np.testing.assert_array_equal(np.asarray(PK.unpack_weight(p_exact)),
+                                      np.asarray(q_direct))
+        p = PK.pack_weight(w, bits=bits, group=128)
+        np.testing.assert_allclose(np.asarray(p.scales),
+                                   np.asarray(scales), rtol=1e-6)
+        # dequantized views agree to one quantization step
+        d1 = np.asarray(PK.dequantize_packed(p, jnp.float32))
+        d2 = np.asarray(PK.dequantize_packed(p_exact, jnp.float32))
+        step = np.repeat(np.asarray(scales), 128, axis=0)
+        assert np.all(np.abs(d1 - d2) <= step + 1e-7)
+
+    def test_pack_is_permutation(self, key):
+        """Tile-major re-layout moves values, never changes them."""
+        w = jax.random.normal(key, (256, 256), jnp.float32)
+        p = PK.pack_weight(w, bits=8, group=128)
+        q_direct, _ = Q.quantize_weight_grouped(w, bits=8, group=128)
+        assert np.array_equal(np.sort(np.asarray(p.data), axis=None),
+                              np.sort(np.asarray(q_direct), axis=None))
+
+    def test_storage_shrinks(self, key):
+        w = jax.random.normal(key, (512, 512), jnp.float32)
+        p4 = PK.pack_weight(w, bits=4)
+        p8 = PK.pack_weight(w, bits=8)
+        assert p4.data.size == p8.data.size // 2
+        assert p4.storage_bytes < 512 * 512  # < 1 byte/value incl. scales * 4
+
+    def test_pack_prequantized_matches(self, key):
+        w = jax.random.normal(key, (256, 128), jnp.float32)
+        q, scales = Q.quantize_weight_grouped(w, bits=4, group=128)
+        p = PK.pack_prequantized(q, scales, bits=4, group=128)
+        np.testing.assert_array_equal(np.asarray(PK.unpack_weight(p)),
+                                      np.asarray(q))
+
+    def test_dequantize_packed(self, key):
+        w = jax.random.normal(key, (256, 128), jnp.float32)
+        p = PK.pack_weight(w, bits=8, group=128)
+        deq = PK.dequantize_packed(p, jnp.float32)
+        assert float(jnp.max(jnp.abs(deq - w))) < 0.05
+
+    def test_rowmajor_baseline_matches(self, key):
+        """The MARLIN-without-repack baseline holds the same values."""
+        w = jax.random.normal(key, (256, 128), jnp.float32)
+        u = PK.quantize_rowmajor(w, bits=4, group=128)
+        q_direct, _ = Q.quantize_weight_grouped(w, bits=4, group=128)
+        np.testing.assert_array_equal(np.asarray(PK.unpack_rowmajor(u)),
+                                      np.asarray(q_direct))
+
+
+class TestGEMMPaths:
+    @pytest.mark.parametrize("impl", ["xla", "naive"])
+    @pytest.mark.parametrize("fmt", ["w4a16kv16", "w8a16kv16", "w8a8kv16",
+                                     "w4a8kv16"])
+    def test_impl_matches_dense(self, key, impl, fmt):
+        policy = get_policy(fmt)
+        x = jax.random.normal(key, (8, 256), jnp.float32) \
+            .astype(jnp.bfloat16)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (256, 128),
+                              jnp.float32) * 0.1
+        p = PK.pack_weight(w, bits=policy.weights.bits, group=128)
+        y = mp_matmul(x, p, policy, impl=impl)
+        y_ref = dense_matmul(x, PK.dequantize_packed(p), jnp.float32)
+        err = float(jnp.max(jnp.abs(y.astype(jnp.float32) -
+                                    y_ref.astype(jnp.float32))))
+        scale = float(jnp.max(jnp.abs(y_ref))) + 1e-6
+        tol = 0.1 if "a8" in fmt else 0.04   # a8 adds act-quant noise
+        assert err / scale < tol, (impl, fmt, err, scale)
+
+
+@given(st.sampled_from([128, 256, 384]), st.sampled_from([128, 256]),
+       st.sampled_from([4, 8]), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_prop_pack_roundtrip(K, N, bits, seed):
+    """Property: tile-major packing of pre-quantized ints is a bijection."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (K, N), jnp.float32)
+    q_direct, scales = Q.quantize_weight_grouped(w, bits=bits, group=128)
+    p = PK.pack_prequantized(q_direct, scales, bits=bits, group=128)
+    np.testing.assert_array_equal(np.asarray(PK.unpack_weight(p)),
+                                  np.asarray(q_direct))

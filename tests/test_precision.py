@@ -1,0 +1,56 @@
+"""PrecisionPolicy: WxAyKVz parsing, aliases, dtype mapping."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.precision import (DEFAULT_SERVING, PrecisionPolicy,
+                                  get_policy)
+
+
+def test_parse_headline_format():
+    p = PrecisionPolicy.parse("w4a16kv8")
+    assert p.weights.bits == 4 and p.weights.packed
+    assert p.acts.bits == 16 and p.acts.is_float
+    assert p.kv.bits == 8 and not p.kv.is_float
+    assert p.compute_dtype == jnp.bfloat16
+    assert p.name == "w4a16kv8"
+
+
+@pytest.mark.parametrize("fmt,wbits,abits,kvbits", [
+    ("w4a16kv4", 4, 16, 4), ("w8a8kv8", 8, 8, 8),
+    ("wfp8a16kvfp8", 8, 16, 8), ("w16a16kv16", 16, 16, 16),
+    ("w4a8kv4", 4, 8, 4),
+])
+def test_parse_matrix(fmt, wbits, abits, kvbits):
+    p = PrecisionPolicy.parse(fmt)
+    assert (p.weights.bits, p.acts.bits, p.kv.bits) == (wbits, abits, kvbits)
+
+
+def test_aliases():
+    assert get_policy("default").name == DEFAULT_SERVING
+    assert get_policy("qserve").name == "w4a8kv4"       # QServe hard-wired
+    assert get_policy("turbomind-optimal").name == "w4a16kv4"
+    assert get_policy("training").weights.bits == 16
+
+
+def test_int8_matmul_flag():
+    assert get_policy("w8a8kv8").int8_matmul
+    assert not get_policy("w4a16kv8").int8_matmul
+    assert not get_policy("wfp8a16kv8").int8_matmul
+
+
+def test_bad_formats_rejected():
+    for bad in ("w2a16kv8", "w4kv8", "a16w4kv8", "w4a16kv2", ""):
+        with pytest.raises(ValueError):
+            PrecisionPolicy.parse(bad)
+
+
+def test_weight_bytes():
+    p = get_policy("w4a16kv8")
+    assert p.weight_bytes(1000) == 500
+    assert get_policy("w16a16kv16").weight_bytes(1000) == 2000
+
+
+def test_fp8_qmax():
+    p = get_policy("wfp8a16kvfp8")
+    assert p.weights.qmax == pytest.approx(448.0)     # e4m3 max
+    assert p.kv.qmax == pytest.approx(57344.0)        # e5m2 max

@@ -1,0 +1,110 @@
+"""Quantization primitives: round-trips, packing inverses, error bounds.
+
+Includes hypothesis property tests on the system's core invariants:
+int4 pack/unpack is a bijection, and symmetric quantization error is
+bounded by scale/2 per element.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as Q
+from repro.core.precision import get_policy
+
+
+class TestIntQuant:
+    def test_roundtrip_error_bound(self, key):
+        w = jax.random.normal(key, (256, 64), jnp.float32)
+        q, scale = Q.quantize_weight_grouped(w, bits=4, group=128)
+        deq = Q.dequantize_weight_grouped(q, scale, group=128,
+                                          dtype=jnp.float32)
+        # |err| <= scale/2 per group-column (+ eps for clip at qmax)
+        bound = np.repeat(np.asarray(scale), 128, axis=0) / 2 + 1e-6
+        assert np.all(np.abs(np.asarray(w - deq)) <= bound)
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_qrange(self, key, bits):
+        w = jax.random.normal(key, (128, 32), jnp.float32) * 100
+        q, _ = Q.quantize_weight_grouped(w, bits=bits, group=64)
+        qmax = 2 ** (bits - 1) - 1
+        assert int(jnp.max(q)) <= qmax and int(jnp.min(q)) >= -qmax
+
+    def test_all_zero_column_safe(self):
+        w = jnp.zeros((128, 8), jnp.float32)
+        q, scale = Q.quantize_weight_grouped(w, bits=4, group=128)
+        assert np.all(np.asarray(q) == 0)
+        assert np.all(np.isfinite(np.asarray(scale)))
+
+
+class TestInt4Packing:
+    def test_pack_unpack_inverse(self, key):
+        q = jax.random.randint(key, (64, 32), -8, 8, jnp.int8)
+        for axis in (0, 1):
+            p = Q.pack_int4(q, axis=axis)
+            assert p.shape[axis] == q.shape[axis] // 2
+            np.testing.assert_array_equal(np.asarray(Q.unpack_int4(p, axis)),
+                                          np.asarray(q))
+
+    def test_nibble_order(self):
+        # low nibble = even index (matches the offline packer / kernels)
+        q = jnp.array([[1], [-2]], jnp.int8)
+        p = Q.pack_int4(q, axis=0)
+        assert p.shape == (1, 1)
+        raw = int(np.asarray(p)[0, 0]) & 0xFF
+        assert raw & 0x0F == 1
+        assert (raw >> 4) & 0x0F == 0xE      # -2 two's complement nibble
+
+
+class TestActKV:
+    def test_per_token_act(self, key):
+        x = jax.random.normal(key, (4, 16, 64), jnp.float32)
+        q, scale = Q.quantize_act_per_token(x)
+        assert q.shape == x.shape and scale.shape == (4, 16, 1)
+        err = np.abs(np.asarray(x) - np.asarray(q, np.float32) *
+                     np.asarray(scale))
+        assert err.max() <= np.asarray(scale).max() / 2 + 1e-6
+
+    @pytest.mark.parametrize("fmt", ["kv4", "kv8", "kvfp8", "kv16"])
+    def test_kv_roundtrip(self, key, fmt):
+        spec = get_policy(f"w4a16{fmt}").kv
+        kv = jax.random.normal(key, (2, 8, 4, 64), jnp.float32) \
+            .astype(jnp.bfloat16)
+        q, scale = Q.quantize_kv(kv, spec)
+        if spec.packed:
+            assert q.shape[-1] == 32
+        deq = Q.dequantize_kv(q, scale, spec, jnp.float32)
+        rel = np.abs(np.asarray(deq) - np.asarray(kv, np.float32))
+        amax = np.abs(np.asarray(kv, np.float32)).max()
+        tol = {"kv4": 0.1, "kv8": 0.01, "kvfp8": 0.1, "kv16": 0.005}[fmt]
+        assert rel.max() <= tol * max(amax, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64)
+       .filter(lambda v: len(v) % 2 == 0))
+@settings(max_examples=50, deadline=None)
+def test_prop_pack_bijection(vals):
+    q = jnp.asarray(vals, jnp.int8).reshape(-1, 1)
+    p = Q.pack_int4(q, axis=0)
+    np.testing.assert_array_equal(np.asarray(Q.unpack_int4(p, 0)),
+                                  np.asarray(q))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([32, 64, 128]))
+@settings(max_examples=25, deadline=None)
+def test_prop_quant_error_bound(seed, bits, group):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (group * 2, 8), jnp.float32) * \
+        (10.0 ** jax.random.randint(jax.random.fold_in(key, 1), (), -2, 3))
+    q, scale = Q.quantize_weight_grouped(w, bits=bits, group=group)
+    deq = Q.dequantize_weight_grouped(q, scale, group=group,
+                                      dtype=jnp.float32)
+    bound = np.repeat(np.asarray(scale), group, axis=0) / 2 + 1e-6
+    assert np.all(np.abs(np.asarray(w - deq)) <= bound)

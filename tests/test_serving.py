@@ -1,0 +1,155 @@
+"""Serving engine: continuous batching, scheduler invariants, sampling,
+quantize_params, eos handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.core.packing import PackedWeight
+from repro.core.precision import get_policy
+from repro.serving import Engine, SamplingParams, Scheduler, quantize_params
+from repro.serving.request import Request, Status
+from repro.serving.sampler import sample
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return Engine(get_reduced("smollm-360m"), n_slots=3, max_seq=64,
+                  prompt_buckets=(16,))
+
+
+class TestEngine:
+    def test_continuous_batching_drains(self, engine):
+        reqs = [engine.submit([1 + i, 2, 3],
+                              SamplingParams(max_new_tokens=5))
+                for i in range(7)]
+        engine.run_until_idle()
+        assert all(r.done and len(r.output) == 5 for r in reqs)
+        assert all(r.ttft is not None and r.latency >= r.ttft for r in reqs)
+
+    def test_greedy_deterministic(self, engine):
+        a = engine.submit([5, 6, 7], SamplingParams(max_new_tokens=6))
+        engine.run_until_idle()
+        b = engine.submit([5, 6, 7], SamplingParams(max_new_tokens=6))
+        engine.run_until_idle()
+        assert a.output == b.output
+
+    def test_prompt_isolation(self, engine):
+        """Concurrent slots don't leak: same prompt gives same greedy
+        output regardless of what else is in the batch."""
+        solo = engine.submit([9, 8, 7], SamplingParams(max_new_tokens=4))
+        engine.run_until_idle()
+        mixed = [engine.submit([9, 8, 7], SamplingParams(max_new_tokens=4)),
+                 engine.submit([1, 2, 3, 4, 5],
+                               SamplingParams(max_new_tokens=4)),
+                 engine.submit([42], SamplingParams(max_new_tokens=4))]
+        engine.run_until_idle()
+        assert mixed[0].output == solo.output
+
+    def test_eos_stops_early(self, engine):
+        # find the first greedy token, then use it as eos
+        probe = engine.submit([3, 1, 4], SamplingParams(max_new_tokens=3))
+        engine.run_until_idle()
+        eos = probe.output[0]
+        r = engine.submit([3, 1, 4], SamplingParams(max_new_tokens=8,
+                                                    eos_id=eos))
+        engine.run_until_idle()
+        assert r.output == [eos]
+
+    def test_padded_prompts_no_leak(self, engine):
+        """Prompts shorter than the bucket behave as unpadded prompts."""
+        short = engine.submit([11, 12], SamplingParams(max_new_tokens=4))
+        engine.run_until_idle()
+        again = engine.submit([11, 12], SamplingParams(max_new_tokens=4))
+        engine.run_until_idle()
+        assert short.output == again.output
+
+
+class TestQuantizeParams:
+    def test_embeddings_stay_bf16(self, key):
+        from repro.models.registry import build
+        cfg = get_reduced("smollm-360m")
+        params = build(cfg).init_params(key)
+        q = quantize_params(params, get_policy("w4a16kv8"))
+        assert not isinstance(q["embed"], PackedWeight)
+        # big projections got packed
+        packed = [l for l in jax.tree.leaves(
+            q, is_leaf=lambda x: isinstance(x, PackedWeight))
+            if isinstance(l, PackedWeight)]
+        assert len(packed) > 0
+
+    def test_w16_noop(self, key):
+        from repro.models.registry import build
+        cfg = get_reduced("smollm-360m")
+        params = build(cfg).init_params(key)
+        q = quantize_params(params, get_policy("w16a16kv16"))
+        assert not any(isinstance(l, PackedWeight) for l in jax.tree.leaves(
+            q, is_leaf=lambda x: isinstance(x, PackedWeight)))
+
+
+class TestSampler:
+    def test_greedy(self, key):
+        logits = jnp.array([[0.1, 3.0, 0.2], [5.0, 0.0, 0.0]])
+        out = sample(key, logits, jnp.zeros(2), jnp.zeros(2, jnp.int32))
+        assert out.tolist() == [1, 0]
+
+    def test_topk_restricts(self, key):
+        logits = jnp.array([[10.0, 9.0, -50.0, -50.0]] * 64)
+        ks = jax.random.split(key, 64)
+        outs = [int(sample(k, logits[:1], jnp.ones(1),
+                           jnp.full(1, 2, jnp.int32))[0]) for k in ks[:16]]
+        assert set(outs) <= {0, 1}
+
+    def test_temperature_spreads(self, key):
+        logits = jnp.zeros((1, 8))
+        outs = {int(sample(jax.random.fold_in(key, i), logits,
+                           jnp.ones(1), jnp.zeros(1, jnp.int32))[0])
+                for i in range(32)}
+        assert len(outs) > 2
+
+
+class TestScheduler:
+    def test_fcfs_admission(self):
+        s = Scheduler(n_slots=2, max_prompt_len=8)
+        rs = [Request(rid=i, prompt=[1]) for i in range(4)]
+        for r in rs:
+            s.add(r)
+        admitted = s.admit()
+        assert [r.rid for r in admitted] == [0, 1]
+        s.finish(rs[0], 1.0)
+        assert [r.rid for r in s.admit()] == [2]
+
+    def test_slot_exclusivity(self):
+        s = Scheduler(n_slots=3, max_prompt_len=8)
+        for i in range(6):
+            s.add(Request(rid=i, prompt=[1]))
+        s.admit()
+        slots = [r.slot for r in s.running()]
+        assert sorted(slots) == [0, 1, 2]
+
+    def test_prompt_length_guard(self):
+        s = Scheduler(n_slots=1, max_prompt_len=4)
+        with pytest.raises(AssertionError):
+            s.add(Request(rid=0, prompt=[1] * 9))
+
+
+@given(st.lists(st.tuples(st.integers(1, 6), st.booleans()),
+                min_size=1, max_size=12))
+@settings(max_examples=20, deadline=None)
+def test_prop_scheduler_never_double_books(ops):
+    """Random admit/finish interleavings keep slots exclusive."""
+    s = Scheduler(n_slots=3, max_prompt_len=8)
+    rid = 0
+    for n_add, do_finish in ops:
+        for _ in range(n_add):
+            s.add(Request(rid=rid, prompt=[1]))
+            rid += 1
+        s.admit()
+        running = s.running()
+        slots = [r.slot for r in running]
+        assert len(slots) == len(set(slots))          # exclusive
+        assert all(0 <= x < 3 for x in slots)
+        if do_finish and running:
+            s.finish(running[0], 0.0)

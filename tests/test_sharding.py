@@ -1,0 +1,185 @@
+"""Sharding rules + distributed equivalence.
+
+Structural tests run on the real single device (specs are pure metadata);
+the numerical-equivalence test runs a subprocess with 8 forced host
+devices and checks the sharded train step reproduces single-device loss.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_reduced
+from repro.core.precision import get_policy
+from repro.models.registry import build
+from repro.serving.engine import quantize_params
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _single_device_rules(cfg):
+    from repro.launch.sharding import ShardingRules
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    return ShardingRules(mesh, cfg), mesh
+
+
+class TestRuleStructure:
+    @pytest.mark.parametrize("arch", ["smollm-360m", "arctic-480b",
+                                      "rwkv6-7b", "recurrentgemma-2b",
+                                      "whisper-tiny"])
+    def test_param_specs_cover_tree(self, arch, key):
+        cfg = get_reduced(arch)
+        model = build(cfg)
+        params = jax.eval_shape(model.init_params, key)
+        rules, mesh = _single_device_rules(cfg)
+        specs = rules.params(params)
+        assert jax.tree_util.tree_structure(specs) == \
+            jax.tree_util.tree_structure(params)
+
+    def test_quantized_params_specs(self, key):
+        cfg = get_reduced("smollm-360m")
+        model = build(cfg)
+        policy = get_policy("w4a16kv8")
+        params = jax.eval_shape(
+            lambda k: quantize_params(model.init_params(k), policy), key)
+        rules, mesh = _single_device_rules(cfg)
+        specs = rules.params(params)       # must not raise
+        assert jax.tree_util.tree_structure(specs) == \
+            jax.tree_util.tree_structure(params)
+
+    def test_cache_specs_cover_tree(self, key):
+        for arch in ("smollm-360m", "recurrentgemma-2b", "rwkv6-7b",
+                     "whisper-tiny"):
+            cfg = get_reduced(arch)
+            model = build(cfg)
+            cache = model.cache_spec(get_policy("w4a16kv8"), 4, 32)
+            rules, mesh = _single_device_rules(cfg)
+            specs = rules.cache(cache)
+            assert jax.tree_util.tree_structure(specs) == \
+                jax.tree_util.tree_structure(cache)
+
+    def test_production_spec_choices(self, key):
+        """On a 16-way model axis: embed shards on vocab, KV falls back to
+        sequence-parallel when heads don't divide."""
+        from repro.launch.sharding import ShardingRules
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        cfg = get_config("mistral-large-123b")
+        rules = ShardingRules.__new__(ShardingRules)
+        rules.mesh = None
+        rules.cfg = cfg
+        rules.model = "model"
+        rules.model_size = 16
+        rules.data = ("data",)
+        rules.data_size = 16
+        rules.fsdp = ("data",)
+        # embed (32768, 12288): vocab divisible → P("model")
+        spec = rules.param_spec(
+            (jax.tree_util.DictKey("embed"),),
+            jax.ShapeDtypeStruct((32768, 12288), jnp.bfloat16))
+        assert spec == P("model")
+        # KV leaf (L, B, S, H, D): H=8 < 16 → sequence-parallel on axis 2
+        kv_spec = rules._kv_spec(
+            jax.ShapeDtypeStruct((88, 128, 32768, 8, 128), jnp.int8))
+        assert kv_spec == P(None, ("data",), "model", None, None)
+
+
+@pytest.mark.slow
+def test_sharded_equals_single_device(tmp_path):
+    """Same init + same batch on a (2,4) mesh vs single device: losses
+    must agree to bf16 tolerance (proves sharding changes layout only)."""
+    script = textwrap.dedent("""
+        import os, sys, json
+        n = int(sys.argv[1])
+        if n > 1:
+            os.environ["XLA_FLAGS"] = \
+                f"--xla_force_host_platform_device_count={n}"
+        import jax, jax.numpy as jnp
+        from repro.configs import get_reduced
+        from repro.models.registry import build
+        from repro.training import optimizer as O
+        from repro.training.loop import make_train_step
+        from repro.launch.sharding import ShardingRules
+
+        cfg = get_reduced("smollm-360m")
+        model = build(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init_params(key)
+        opt = O.adamw(lr=1e-3)
+        opt_state = opt.init(params)
+        toks = jax.random.randint(key, (8, 32), 0, cfg.vocab)
+        step = make_train_step(model, opt)
+        if n > 1:
+            mesh = jax.make_mesh((2, n // 2), ("data", "model"))
+            rules = ShardingRules(mesh, cfg)
+            with mesh:
+                fn = jax.jit(step, in_shardings=(
+                    rules.params(params),
+                    rules.opt_state(params, opt_state),
+                    rules.tokens(toks.shape), rules.tokens(toks.shape)))
+                _, _, loss = fn(params, opt_state, toks, toks)
+        else:
+            _, _, loss = jax.jit(step)(params, opt_state, toks, toks)
+        print(json.dumps({"loss": float(loss)}))
+    """)
+    p = tmp_path / "dist.py"
+    p.write_text(script)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    outs = {}
+    for n in (1, 8):
+        r = subprocess.run([sys.executable, str(p), str(n)], env=env,
+                           capture_output=True, text=True, timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs[n] = json.loads(r.stdout.strip().splitlines()[-1])["loss"]
+    assert abs(outs[1] - outs[8]) < 0.05, outs
+
+
+@pytest.mark.slow
+def test_sp_attention_matches_flash(tmp_path):
+    """Sequence-parallel shard_map prefill attention (launch/spattn.py)
+    equals single-device flash attention on a 4-device mesh."""
+    script = textwrap.dedent("""
+        import os, json
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from repro.core import attention as A
+        from repro.launch.spattn import build_sp_prefill
+
+        mesh = jax.make_mesh((1, 4), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        B, S, H, Hkv, D = 2, 1024, 4, 2, 64
+        mk = lambda i, h: jax.random.normal(
+            jax.random.fold_in(key, i), (B, S, h, D)).astype(jnp.bfloat16)
+        q, k, v = mk(0, H), mk(1, Hkv), mk(2, Hkv)
+        ref = A.flash_attention(q, k, v, q_chunk=256, kv_chunk=256)
+        sp = build_sp_prefill(mesh, q_chunk=256, kv_chunk=256)
+        with mesh:
+            out = jax.jit(lambda q, k, v: sp(q, k, v))(q, k, v)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32) -
+                                    ref.astype(jnp.float32))))
+        # window too
+        refw = A.flash_attention(q, k, v, window=100, q_chunk=256,
+                                 kv_chunk=256)
+        with mesh:
+            outw = jax.jit(lambda q, k, v: sp(q, k, v, window=100))(q, k, v)
+        errw = float(jnp.max(jnp.abs(outw.astype(jnp.float32) -
+                                     refw.astype(jnp.float32))))
+        print(json.dumps({"err": err, "errw": errw}))
+    """)
+    p = tmp_path / "sp.py"
+    p.write_text(script)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, str(p)], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["err"] < 0.03, out
+    assert out["errw"] < 0.03, out

@@ -1,0 +1,117 @@
+"""Training substrate: optimizers, loop convergence, checkpoint, data."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.training import checkpoint as CKPT
+from repro.training import data as D
+from repro.training import optimizer as O
+from repro.training.loop import train
+
+
+class TestOptimizers:
+    def _quadratic(self, opt, steps=200):
+        """Minimize ||x - 3||²; both optimizers must descend."""
+        params = {"x": jnp.array([10.0, -4.0], jnp.float32)}
+        state = opt.init(params)
+        for _ in range(steps):
+            grads = {"x": 2 * (params["x"] - 3.0)}
+            params, state = opt.update(grads, state, params)
+        return float(jnp.max(jnp.abs(params["x"] - 3.0)))
+
+    def test_adamw_converges(self):
+        assert self._quadratic(O.adamw(lr=0.3, weight_decay=0.0,
+                                       warmup=5, total_steps=200)) < 0.5
+
+    def test_adafactor_converges(self):
+        # adafactor's update is scale-invariant; matrices converge too
+        opt = O.adafactor(lr=0.1)
+        params = {"w": jnp.full((4, 4), 10.0, jnp.float32)}
+        state = opt.init(params)
+        for _ in range(300):
+            grads = {"w": 2 * (params["w"] - 3.0)}
+            params, state = opt.update(grads, state, params)
+        assert float(jnp.max(jnp.abs(params["w"] - 3.0))) < 1.0
+
+    def test_adafactor_state_is_factored(self, key):
+        opt = O.adafactor()
+        params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+        st = opt.init(params)
+        assert st["m"]["w"]["vr"].shape == (64,)
+        assert st["m"]["w"]["vc"].shape == (32,)
+        assert st["m"]["b"]["v"].shape == (64,)
+
+    def test_for_config_selects(self):
+        big = get_reduced("mistral-large-123b")
+        big = dataclasses.replace(big, big_model=True)
+        small = get_reduced("smollm-360m")
+        # adafactor state has "m", adamw has "mu"
+        assert "m" in O.for_config(big).init({"x": jnp.zeros(2)})
+        assert "mu" in O.for_config(small).init({"x": jnp.zeros(2)})
+
+
+class TestLoop:
+    @pytest.mark.slow
+    def test_loss_descends(self):
+        res = train(get_reduced("smollm-360m"), n_steps=40, batch=4,
+                    seq=64, lr=3e-3, log_every=39)
+        first, last = res["losses"][0][1], res["losses"][-1][1]
+        assert last < first - 0.2, (first, last)
+
+    def test_single_step_runs(self):
+        res = train(get_reduced("whisper-tiny"), n_steps=2, batch=2,
+                    seq=16, log_every=1)
+        assert all(np.isfinite(l) for _, l in res["losses"])
+
+
+class TestCheckpoint:
+    def test_roundtrip_all_dtypes(self, tmp_path, key):
+        tree = {
+            "bf16": jax.random.normal(key, (4, 4)).astype(jnp.bfloat16),
+            "f32": jax.random.normal(key, (3,)),
+            "i32": jnp.arange(5, dtype=jnp.int32),
+            "nested": {"fp8": jnp.ones((2, 2), jnp.float8_e4m3fn)},
+        }
+        path = str(tmp_path / "ck.npz")
+        CKPT.save(path, tree, step=7)
+        out, step = CKPT.restore(path, tree)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        CKPT.save(path, {"x": jnp.zeros((4,))})
+        with pytest.raises(AssertionError):
+            CKPT.restore(path, {"x": jnp.zeros((5,))})
+
+
+class TestData:
+    def test_deterministic(self):
+        a = list(D.batches(1000, 2, 16, 3, seed=5))
+        b = list(D.batches(1000, 2, 16, 3, seed=5))
+        for (ta, ga), (tb, gb) in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+    def test_next_token_alignment(self):
+        toks, tgts = next(D.batches(1000, 2, 16, 1))
+        assert toks.shape == tgts.shape == (2, 16)
+        # targets are tokens shifted by one within the same stream:
+        # regenerate with seq+1 view via corpus directly
+        c = D.SyntheticCorpus(1000, 0)
+        flat = c.stream(2 * 17).reshape(2, 17)
+        np.testing.assert_array_equal(np.asarray(toks), flat[:, :-1])
+        np.testing.assert_array_equal(np.asarray(tgts), flat[:, 1:])
+
+    def test_corpus_has_structure(self):
+        """Bigram structure → repeated successor pairs (loss signal)."""
+        c = D.SyntheticCorpus(500, 0)
+        s = c.stream(5000)
+        pairs = set(zip(s[:-1].tolist(), s[1:].tolist()))
+        assert len(pairs) < 4000   # far fewer distinct pairs than random

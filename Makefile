@@ -1,0 +1,24 @@
+# One-command wrappers around the repo's standard invocations.
+#
+#   make test        tier-1 suite (ROADMAP.md "Tier-1 verify")
+#   make test-fast   tier-1 minus the slow end-to-end/serving modules
+#   make bench       all benchmark tables
+#   make bench-paged paged-vs-dense KV cache benchmark only
+
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-paged
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q --ignore=tests/test_training.py \
+	    --ignore=tests/test_sharding.py --ignore=tests/test_consistency.py
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-paged:
+	$(PY) -m benchmarks.run --only paged

@@ -17,6 +17,8 @@ TABLES = {
     "fig21": ("benchmarks.kv_precision", "Fig. 18/21 KV precision sweep"),
     "appE": ("benchmarks.kv_accuracy", "Appendix E KV accuracy"),
     "fig20": ("benchmarks.ablations", "Fig. 20 internal baselines"),
+    "paged": ("benchmarks.paged_vs_dense",
+              "Paged vs dense KV memory + throughput"),
 }
 
 

@@ -4,7 +4,8 @@ Public surface:
   PrecisionPolicy / get_policy          — WxAyKVz format handling
   pack_weight / PackedWeight            — offline hardware-aware packing (§4.1)
   mp_matmul                             — mixed-precision GEMM pipeline (§3.4)
-  KVCache / init_cache / append         — quantized KV cache
+  KVCache / init_cache / append         — quantized KV cache (dense slab)
+  PagedKVCache / BlockAllocator         — block-pooled quantized KV cache
   prefill_attention / decode_attention  — mixed-precision attention pipeline
 """
 from .precision import PrecisionPolicy, FormatSpec, get_policy, DEFAULT_SERVING
@@ -12,6 +13,9 @@ from .packing import (PackedWeight, pack_weight, unpack_weight,
                       dequantize_packed, quantize_rowmajor)
 from .gemm import mp_matmul, dense_matmul
 from .kvcache import KVCache, init_cache, cache_spec, append, store_dim
+from .paged_kvcache import (PagedKVCache, BlockAllocator, OutOfBlocksError,
+                            init_paged, append_paged, gather_view,
+                            scatter_slot, blocks_needed, kv_bytes)
 from .attention import (prefill_attention, decode_attention, cross_attention,
                         flash_attention)
 
@@ -20,5 +24,8 @@ __all__ = [
     "PackedWeight", "pack_weight", "unpack_weight", "dequantize_packed",
     "quantize_rowmajor", "mp_matmul", "dense_matmul",
     "KVCache", "init_cache", "cache_spec", "append", "store_dim",
+    "PagedKVCache", "BlockAllocator", "OutOfBlocksError", "init_paged",
+    "append_paged", "gather_view", "scatter_slot", "blocks_needed",
+    "kv_bytes",
     "prefill_attention", "decode_attention", "cross_attention",
 ]

@@ -82,12 +82,20 @@ def gptq_lite_quantize(
 
     Processes K rows in quantization-group blocks: after quantizing block g,
     the residual error weighted by H_diag is propagated into the not-yet-
-    quantized rows (diagonal OBQ update).
+    quantized rows (diagonal OBQ update).  The diagonal approximation is a
+    heuristic — on some (weight, activation) draws the feedback *increases*
+    the activation-weighted reconstruction error — so each output column
+    falls back to plain RTN whenever RTN reconstructs it better on the
+    calibration set.  The calibration objective ``E‖x(Ŵ − W)‖²`` decomposes
+    exactly over output columns, so the per-column argmin is never worse
+    than either candidate: gptq_lite ≤ RTN by construction.
     Returns (q (K,N) int8-held values, scales (K//group, N)).
     """
     K, N = w.shape
     G = K // group
-    h = jnp.mean(x_calib.astype(jnp.float32) ** 2, axis=0) + 1e-6    # (K,)
+    xf = x_calib.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    h = jnp.mean(xf ** 2, axis=0) + 1e-6                             # (K,)
     qmax = 2 ** (bits - 1) - 1
 
     def body(carry, g):
@@ -103,8 +111,21 @@ def gptq_lite_quantize(
         w_next = w_cur - mask[:, None] * corr[None, :]
         return w_next, (qblk.astype(jnp.int8), scale[0])
 
-    _, (qs, scales) = jax.lax.scan(body, w.astype(jnp.float32), jnp.arange(G))
-    return qs.reshape(K, N), scales
+    _, (qs, scales) = jax.lax.scan(body, wf, jnp.arange(G))
+    q_fb, s_fb = qs.reshape(K, N), scales
+
+    # per-column RTN fallback (monotone-improvement guarantee)
+    q_rtn, s_rtn = Q.quantize_weight_grouped(wf, bits=bits, group=group)
+
+    def col_err(q, s):
+        deq = Q.dequantize_weight_grouped(q, s, group=group,
+                                          dtype=jnp.float32)
+        return jnp.mean((xf @ (deq - wf)) ** 2, axis=0)              # (N,)
+
+    keep_fb = col_err(q_fb, s_fb) <= col_err(q_rtn, s_rtn)           # (N,)
+    q = jnp.where(keep_fb[None, :], q_fb, q_rtn)
+    s = jnp.where(keep_fb[None, :], s_fb, s_rtn)
+    return q, s
 
 
 def smoothquant_factor(x_calib: jax.Array, w: jax.Array,

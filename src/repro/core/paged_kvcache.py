@@ -1,0 +1,280 @@
+"""Paged quantized KV cache: block-pool storage + per-slot block tables.
+
+The dense cache (kvcache.py) allocates one ``(n_slots, max_seq, H, Dstore)``
+slab per precision format — memory scales with ``n_slots × max_seq`` even
+when most slots hold short sequences, which caps concurrency long before
+the accelerator runs out of compute (the paper's "heavy traffic" regime,
+and the motivation behind vLLM/KVmix-style paging).  This module stores KV
+in fixed-size *blocks* instead:
+
+Layout
+------
+* **Block pool**: ``k/v`` are ``(n_blocks, block_size, H, Dstore)`` with
+  per-(token, head) scales ``(n_blocks, block_size, H, 1)`` — the same
+  quantized layout as the dense cache (head_dim minor / lane axis; kv4
+  nibble-packed 2-per-int8, ``Dstore = head_dim // 2``), so every
+  ``FormatSpec`` works unchanged and dequantization stays lane-aligned.
+* **Block table**: ``(n_slots, blocks_per_slot)`` int32.  Entry ``j`` of
+  slot ``b``'s row names the pool block holding logical positions
+  ``[j*block_size, (j+1)*block_size)`` of that slot.  Unmapped entries hold
+  the sentinel ``n_blocks`` (one past the pool): scatter-writes through a
+  sentinel are dropped, gather-reads clamp to an arbitrary (finite) pool
+  element — safe because every position at or beyond a slot's write
+  frontier is masked by the causal ``kpos <= pos`` attention mask.
+* **Allocator**: `BlockAllocator` is plain host-side Python (the engine
+  mutates block tables between jit'd steps, exactly like vLLM's scheduler
+  sits outside the CUDA graphs).
+
+The whole cache is a registered-dataclass pytree, so the model layer can
+``jax.lax.scan`` over an ``(L, ...)``-stacked instance and the launch layer
+can shard the pool axes like any other array.  All properties (block_size,
+n_blocks, ...) are derived from leaf shapes and are only meaningful on a
+per-layer (unstacked) instance.
+
+Equivalence contract (locked down by tests/test_paged_kvcache.py):
+``gather_view(append_paged(...))`` returns a dense ``KVCache`` view whose
+entries at every written position are *bit-identical* to what the dense
+``kvcache.append_per_slot`` path stores — paging is a pure layout change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kvcache as KV
+from . import quantize as Q
+from .precision import FormatSpec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVCache:
+    k: jax.Array            # (n_blocks, block_size, H, Dstore)
+    v: jax.Array            # (n_blocks, block_size, H, Dstore)
+    k_scale: jax.Array      # (n_blocks, block_size, H, 1) f32
+    v_scale: jax.Array      # (n_blocks, block_size, H, 1) f32
+    block_table: jax.Array  # (n_slots, blocks_per_slot) int32; n_blocks = unmapped
+    #: (n_slots,) int32 — advisory append counter, incremented for every
+    #: slot on each append exactly like the dense cache's ``length`` (so
+    #: dense/paged views stay leaf-identical).  The engine's host-side
+    #: ``positions`` are the authoritative per-slot frontier; attention
+    #: masks by position, never by this field.
+    length: jax.Array
+
+    # Shape-derived metadata — valid on per-layer (unstacked) instances.
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def n_slots(self) -> int:
+        return self.block_table.shape[0]
+
+    @property
+    def blocks_per_slot(self) -> int:
+        return self.block_table.shape[1]
+
+    @property
+    def max_context(self) -> int:
+        """Longest per-slot context the block table can map."""
+        return self.blocks_per_slot * self.block_size
+
+
+class OutOfBlocksError(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free pool."""
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over ``n_blocks`` pool blocks.
+
+    Invariants (locked down by tests/test_paged_kvcache.py):
+    * a block is never handed out twice while allocated (no double-alloc),
+    * ``free`` returns blocks to the pool and rejects double-frees,
+    * ``alloc`` raises :class:`OutOfBlocksError` rather than over-commit.
+    """
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = int(n_blocks)
+        self.reset()
+
+    def reset(self) -> None:
+        self._free: List[int] = list(range(self.n_blocks - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfBlocksError(
+                f"requested {n} blocks, {len(self._free)} free "
+                f"of {self.n_blocks}")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._used.update(blocks)
+        return blocks
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"block {b} is not allocated (double free?)")
+            self._used.remove(b)
+            self._free.append(b)
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    return max(1, -(-int(n_tokens) // int(block_size)))
+
+
+def init_paged(n_slots: int, n_blocks: int, block_size: int, kv_heads: int,
+               head_dim: int, spec: FormatSpec,
+               blocks_per_slot: Optional[int] = None) -> PagedKVCache:
+    """Zero-initialized pool with an all-sentinel block table."""
+    ds = KV.store_dim(head_dim, spec)
+    bps = blocks_per_slot if blocks_per_slot is not None else \
+        blocks_needed(n_blocks * block_size, block_size)
+    shape = (n_blocks, block_size, kv_heads, ds)
+    return PagedKVCache(
+        k=jnp.zeros(shape, spec.dtype),
+        v=jnp.zeros(shape, spec.dtype),
+        k_scale=jnp.ones((n_blocks, block_size, kv_heads, 1), jnp.float32),
+        v_scale=jnp.ones((n_blocks, block_size, kv_heads, 1), jnp.float32),
+        block_table=jnp.full((n_slots, bps), n_blocks, jnp.int32),
+        length=jnp.zeros((n_slots,), jnp.int32),
+    )
+
+
+def _flat_indices(cache: PagedKVCache, tok: jax.Array) -> jax.Array:
+    """Logical per-slot token positions (B, T) → flat pool indices (B, T).
+
+    Positions mapped by a sentinel (or beyond the table) come back as
+    ``n_blocks * block_size`` — out of range for the flattened pool, so
+    scatter drops them and gather (mode="clip") clamps to a finite value.
+    """
+    bs = cache.block_size
+    bidx = tok // bs                                       # (B, T)
+    safe = jnp.clip(bidx, 0, cache.blocks_per_slot - 1)
+    blk = jnp.take_along_axis(cache.block_table, safe, axis=1)
+    blk = jnp.where(bidx < cache.blocks_per_slot, blk, cache.n_blocks)
+    oob = jnp.int32(cache.n_blocks * bs)
+    return jnp.where(blk < cache.n_blocks, blk * bs + tok % bs, oob)
+
+
+def _pool_scatter(pool: jax.Array, flat: jax.Array,
+                  vals: jax.Array) -> jax.Array:
+    """Write vals (N, H, d) at flat indices (N,) into (nb, bs, H, d) pool."""
+    nb, bs = pool.shape[:2]
+    p = pool.reshape((nb * bs,) + pool.shape[2:])
+    p = p.at[flat].set(vals, mode="drop")
+    return p.reshape(pool.shape)
+
+
+def append_paged(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, spec: FormatSpec) -> PagedKVCache:
+    """Ragged append through the block table: slot ``b`` quantizes and
+    writes its ``T`` new tokens at logical positions ``pos[b] + t``.
+
+    k_new/v_new: (B, T, H, D) compute dtype; pos: (B,) int32 (a scalar is
+    broadcast).  Same quantization path as the dense cache — values land
+    bit-identical, only the layout differs.
+    """
+    B, T = k_new.shape[:2]
+    kq, ks = Q.quantize_kv(k_new, spec)
+    vq, vs = Q.quantize_kv(v_new, spec)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    tok = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]   # (B, T)
+    flat = _flat_indices(cache, tok).reshape(-1)
+    merge = lambda a: a.reshape((B * T,) + a.shape[2:])
+    return PagedKVCache(
+        k=_pool_scatter(cache.k, flat, merge(kq)),
+        v=_pool_scatter(cache.v, flat, merge(vq)),
+        k_scale=_pool_scatter(cache.k_scale, flat,
+                              merge(ks.astype(jnp.float32))),
+        v_scale=_pool_scatter(cache.v_scale, flat,
+                              merge(vs.astype(jnp.float32))),
+        block_table=cache.block_table,
+        length=cache.length + T,
+    )
+
+
+def gather_view(cache: PagedKVCache,
+                n_ctx: Optional[int] = None) -> KV.KVCache:
+    """Materialize a dense ``(n_slots, n_ctx, H, Dstore)`` view of every
+    slot's logical context by gathering pool blocks through the block
+    tables.
+
+    This is the glue between paged storage and the existing decode
+    kernels: the view is a plain :class:`KVCache`, so the fused XLA
+    attention and the Pallas decode kernel consume it unchanged.  Unmapped
+    positions clamp to an arbitrary pool element — finite garbage that the
+    caller's causal mask turns into exact zeros.  The view is transient
+    (activation memory); only the pool is resident.
+    """
+    bs = cache.block_size
+    n_ctx = cache.max_context if n_ctx is None else n_ctx
+    assert n_ctx % bs == 0, (n_ctx, bs)
+    nbp = min(n_ctx // bs, cache.blocks_per_slot)
+    tbl = cache.block_table[:, :nbp]                       # (B, nbp)
+    flat = (tbl[:, :, None] * bs
+            + jnp.arange(bs, dtype=jnp.int32)[None, None]) \
+        .reshape(cache.n_slots, nbp * bs)                  # (B, n_ctx)
+    if nbp * bs < n_ctx:   # table shorter than requested view: clamp-pad
+        flat = jnp.pad(flat, ((0, 0), (0, n_ctx - nbp * bs)))
+    nb = cache.n_blocks
+
+    def gath(pool):
+        p = pool.reshape((nb * bs,) + pool.shape[2:])
+        out = jnp.take(p, flat.reshape(-1), axis=0, mode="clip")
+        return out.reshape((cache.n_slots, n_ctx) + pool.shape[2:])
+
+    return KV.KVCache(k=gath(cache.k), v=gath(cache.v),
+                      k_scale=gath(cache.k_scale),
+                      v_scale=gath(cache.v_scale),
+                      length=cache.length)
+
+
+def scatter_slot(cache: PagedKVCache, dense: KV.KVCache,
+                 slot: jax.Array) -> PagedKVCache:
+    """Move one prefilled single-slot dense cache into ``slot``'s blocks.
+
+    ``dense`` holds B=1 *already-quantized* KV for logical positions
+    ``[0, S_tmp)`` (the engine's ragged-prefill staging buffer); values are
+    copied verbatim — no requantization — so the paged cache ends up
+    bit-identical to a dense-slab splice of the same buffer.  Positions
+    beyond the slot's allocated blocks hit sentinel table entries and are
+    dropped.
+    """
+    S = dense.k.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    tok = jnp.arange(S, dtype=jnp.int32)[None]               # (1, S)
+    row = jax.lax.dynamic_slice_in_dim(cache.block_table, slot, 1, 0)
+    row_cache = dataclasses.replace(cache, block_table=row)
+    flat = _flat_indices(row_cache, tok).reshape(-1)
+    put = lambda pool, val: _pool_scatter(pool, flat, val[0])
+    return PagedKVCache(
+        k=put(cache.k, dense.k), v=put(cache.v, dense.v),
+        k_scale=put(cache.k_scale, dense.k_scale),
+        v_scale=put(cache.v_scale, dense.v_scale),
+        block_table=cache.block_table,
+        length=cache.length.at[slot].set(dense.length[0]),
+    )
+
+
+def kv_bytes(cache) -> int:
+    """Resident bytes of a KV store pytree — paged pool (+ scales +
+    tables) or dense slab alike.  Engine.kv_resident_bytes and the
+    paged-vs-dense benchmark both report this number."""
+    leaves = jax.tree_util.tree_leaves(cache)
+    return int(sum(l.size * l.dtype.itemsize for l in leaves))

@@ -54,7 +54,7 @@ def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0, 0]
+    pos = pos_ref[0, 0]                # this slot's newest-token position
     q = q_ref[0, 0]                                     # (rep, D) bf16
     kt = k_ref[0, :, 0]                                 # (bs, Dstore)
     ks = ks_ref[0, :, 0]                                # (bs,)
@@ -107,7 +107,7 @@ def kvattn_decode_grouped(
     k_scale: jax.Array,    # (B, S, Hkv) f32
     v: jax.Array,
     v_scale: jax.Array,
-    pos: jax.Array,        # (1, 1) int32: index of the newest token
+    pos: jax.Array,        # (B, 1) int32: per-slot newest-token index
     *,
     packed: bool,
     kv_is_float: bool = False,
@@ -135,7 +135,7 @@ def kvattn_decode_grouped(
             pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
             pl.BlockSpec((1, bs, 1, Ds), lambda b, h, s: (b, s, h, 0)),
             pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
-            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0),
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0),
                          memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((1, 1, rep, D), lambda b, h, s: (b, h, 0, 0)),
@@ -147,3 +147,11 @@ def kvattn_decode_grouped(
         ],
         interpret=interpret,
     )(q, k, k_scale, v, v_scale, pos)
+
+
+# Paged decode: each slot's block table is gathered into the dense
+# (B, S, Hkv, Dstore) layout this kernel's KV loading pipeline walks
+# (core/paged_kvcache.gather_view — single source of the sentinel/clip
+# indexing), then kvattn_decode_grouped runs unchanged; see
+# ops.kvattn_decode_paged.  A future Pallas paged kernel can replace the
+# gather with in-kernel block-table indirection (ROADMAP open items).

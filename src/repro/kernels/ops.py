@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.kvcache import KVCache
 from repro.core.packing import PackedWeight
+from repro.core.paged_kvcache import PagedKVCache, gather_view
 from repro.core.precision import FormatSpec, PrecisionPolicy
 
 from . import kvattn as _kvattn
@@ -86,16 +87,36 @@ def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def kvattn_decode(q: jax.Array, cache: KVCache, spec: FormatSpec,
                   pos, window: Optional[int] = None,
                   block_s: int = 256) -> jax.Array:
-    """Decode attention for one new token.  q: (B, 1, H, D)."""
+    """Decode attention for one new token.  q: (B, 1, H, D); ``pos`` is a
+    scalar or a per-slot (B,) vector of newest-token positions (the
+    continuous-batching engine's ragged slots)."""
     B, T, H, D = q.shape
     assert T == 1, "pallas decode kernel is single-token (use prefill path)"
     Hkv = cache.k.shape[2]
     rep = H // Hkv
     qg = q.reshape(B, Hkv, rep, D)          # adaptive head alignment (§4.2)
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    if pos_arr.ndim == 0:
+        pos_arr = jnp.broadcast_to(pos_arr, (B,))
+    pos_arr = pos_arr.reshape(B, 1)
     out = _kvattn.kvattn_decode_grouped(
         qg.astype(jnp.bfloat16),
         cache.k, cache.k_scale[..., 0], cache.v, cache.v_scale[..., 0],
         pos_arr, packed=spec.packed, kv_is_float=spec.is_float,
         block_s=block_s, window=window, interpret=INTERPRET)
     return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def kvattn_decode_paged(q: jax.Array, cache: PagedKVCache, spec: FormatSpec,
+                        pos, window: Optional[int] = None,
+                        block_s: int = 256) -> jax.Array:
+    """Paged decode attention: block-table gather + the fused kernel.
+
+    q: (B, 1, H, D); ``cache`` is a per-layer (unstacked) PagedKVCache
+    whose block table maps each of the B slots' logical contexts.  The
+    gather (one XLA dynamic-gather per operand, HBM→HBM) materializes the
+    dense per-slot view the kernel's KV loading pipeline walks; unmapped
+    table entries clamp to arbitrary finite pool data, which the kernel's
+    ``kpos <= pos`` mask zeroes exactly."""
+    return kvattn_decode(q, gather_view(cache), spec, pos, window=window,
+                         block_s=block_s)

@@ -25,6 +25,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-kind", choices=("dense", "paged"),
+                    default="dense", help="KV store backend")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="KV pool blocks (paged; default: dense parity)")
     args = ap.parse_args(argv)
 
     import numpy as np
@@ -36,7 +42,9 @@ def main(argv=None) -> int:
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     eng = Engine(cfg, policy=get_policy(args.policy), n_slots=args.slots,
                  max_seq=args.max_seq,
-                 prompt_buckets=(args.prompt_len,), seed=args.seed)
+                 prompt_buckets=(args.prompt_len,), seed=args.seed,
+                 cache_kind=args.cache_kind, block_size=args.block_size,
+                 n_blocks=args.n_blocks)
     rng = np.random.default_rng(args.seed)
     # Poisson arrival schedule (paper §5.1: workload from a Poisson process)
     gaps = rng.exponential(1.0 / args.rate, size=args.requests)

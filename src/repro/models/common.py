@@ -12,9 +12,11 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import attention as A
+from repro.core import paged_kvcache as PKV
 from repro.core.gemm import mp_matmul
 from repro.core.packing import PackedWeight, pack_weight
-from repro.core.precision import PrecisionPolicy
+from repro.core.precision import FormatSpec, PrecisionPolicy
 
 Params = Dict[str, Any]
 
@@ -105,6 +107,34 @@ def maybe_quantize(w: jax.Array, policy: PrecisionPolicy,
     for _ in range(w.ndim - 2):
         fn = jax.vmap(fn)
     return fn(w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Decode attention — transparent over dense vs paged KV storage
+# ---------------------------------------------------------------------------
+
+
+def attend_decode(q: jax.Array, cache_l, spec: FormatSpec, pos,
+                  window=None, impl: str = "fused") -> jax.Array:
+    """Decode attention over either cache backend (per-layer view).
+
+    Dense ``KVCache`` goes straight to the attention pipeline.  A
+    ``PagedKVCache`` first gathers each slot's block table into a dense
+    contiguous view (a transient activation; the resident store stays
+    block-pooled), then runs the *same* fused kernel — for the Pallas
+    path the gather lives in kernels/kvattn.py next to the kernel it
+    feeds.  Positions at or beyond a slot's write frontier hold arbitrary
+    finite pool data; the causal ``kpos <= pos`` mask turns them into
+    exact zeros, so both backends produce bit-identical outputs.
+    """
+    if isinstance(cache_l, PKV.PagedKVCache):
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            return kops.kvattn_decode_paged(q, cache_l, spec, pos,
+                                            window=window)
+        cache_l = PKV.gather_view(cache_l)
+    return A.decode_attention(q, cache_l, spec, pos, window=window,
+                              impl=impl)
 
 
 # ---------------------------------------------------------------------------

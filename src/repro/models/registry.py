@@ -48,6 +48,10 @@ class Model:
     hidden_states: Callable[..., Any]
     extra_inputs: Callable[..., Dict[str, jax.Array]]
     extra_input_specs: Callable[..., Dict[str, jax.ShapeDtypeStruct]]
+    #: families whose decode cache is a KVCache pytree additionally expose
+    #: a paged block-pool cache (policy, n_slots, n_blocks, block_size,
+    #: blocks_per_slot) -> PagedKVCache; None for recurrent-state families.
+    init_paged_cache: Optional[Callable[..., Any]] = None
 
     def logits(self, params, h):
         return T.lm_logits(params, h)
@@ -100,6 +104,9 @@ def build(cfg: ModelConfig) -> Model:
                                   remat=remat, **ex),
             extra_inputs=extra_inputs,
             extra_input_specs=extra_specs,
+            init_paged_cache=lambda policy, n_slots, n_blocks, block_size,
+            blocks_per_slot: T.init_paged_cache(
+                cfg, policy, n_slots, n_blocks, block_size, blocks_per_slot),
         )
 
     if fam == "ssm":

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import attention as A
 from repro.core import kvcache as KV
+from repro.core import paged_kvcache as PKV
 from repro.core.precision import PrecisionPolicy
 from repro.configs.base import ModelConfig
 
@@ -187,6 +188,21 @@ def cache_spec(cfg: ModelConfig, policy: PrecisionPolicy, batch: int,
     return jax.tree.map(f, base)
 
 
+def init_paged_cache(cfg: ModelConfig, policy: PrecisionPolicy, n_slots: int,
+                     n_blocks: int, block_size: int,
+                     blocks_per_slot: int) -> PKV.PagedKVCache:
+    """Per-layer block pools stacked (L, n_blocks, block_size, H, Ds).
+
+    The block table is replicated across layers (a logical block occupies
+    the same pool index in every layer's pool) so the stacked cache scans
+    over layers exactly like the dense cache; the replication is int32 and
+    negligible next to the pools."""
+    f = jax.vmap(lambda _: PKV.init_paged(
+        n_slots, n_blocks, block_size, cfg.n_kv_heads, cfg.hd, policy.kv,
+        blocks_per_slot=blocks_per_slot))
+    return f(jnp.arange(cfg.n_layers))
+
+
 # ---------------------------------------------------------------------------
 # Prefill: full prompt → last-token logits + populated quantized cache
 # ---------------------------------------------------------------------------
@@ -236,22 +252,38 @@ def prefill(params, cfg: ModelConfig, policy: PrecisionPolicy, tokens,
 
 
 def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy,
-                tokens, cache: KV.KVCache, pos,
+                tokens, cache, pos,
                 impl: str = "xla") -> Tuple[jax.Array, KV.KVCache]:
-    """tokens: (B, 1); pos: scalar or (B,) position of the new token."""
+    """tokens: (B, T); pos: scalar or (B,) position of the first new token.
+
+    T > 1 is the engine's chunked ragged prefill: the T queries attend
+    causally to ``pos + t`` cached tokens each.  ``cache`` may be the dense
+    :class:`KV.KVCache` slab or a :class:`PKV.PagedKVCache` block pool —
+    the paged branch appends through the block table and gathers a dense
+    per-slot view for the existing fused attention (models/common.py).
+    """
+    paged = isinstance(cache, PKV.PagedKVCache)
     x = jnp.take(params["embed"], tokens, axis=0).astype(policy.compute_dtype)
     B, T, d = x.shape
     pos = jnp.asarray(pos, jnp.int32)
     per_slot = pos.ndim == 1
+    # stacked cache leaves carry (L, ...): dense k is (L, B, S, H, Ds),
+    # paged tables are (L, n_slots, blocks_per_slot) mapping bs-token blocks
+    if paged:
+        n_ctx = cache.block_table.shape[2] * cache.k.shape[2]
+    else:
+        n_ctx = cache.k.shape[2]
     if not cfg.use_rope:
+        sp = C.sinusoidal_pos(n_ctx, d)
         if per_slot:
-            sp = C.sinusoidal_pos(cache.k.shape[2], d)
-            x = x + jnp.take(sp, pos, axis=0)[:, None]
+            idx = pos[:, None] + jnp.arange(T)[None]
+            x = x + jnp.take(sp, idx, axis=0)
         else:
-            x = x + jax.lax.dynamic_slice_in_dim(
-                C.sinusoidal_pos(cache.k.shape[2], d), pos, 1)[None]
-    rope_pos = pos[:, None] if per_slot else jnp.broadcast_to(pos, (T,))[None]
-    rope_pos = jnp.broadcast_to(rope_pos, (B, T))
+            x = x + jax.lax.dynamic_slice_in_dim(sp, pos, T)[None]
+    if per_slot:
+        rope_pos = pos[:, None] + jnp.arange(T)[None]
+    else:
+        rope_pos = jnp.broadcast_to(pos + jnp.arange(T), (B, T))
 
     def body(xc, sl):
         lp, cache_l, idx = sl
@@ -262,13 +294,15 @@ def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy,
                              theta=cfg.rope_theta)
             k = C.apply_rope(k, rope_pos, rotary_pct=cfg.rotary_pct,
                              theta=cfg.rope_theta)
-        if per_slot:
+        if paged:
+            cache_l = PKV.append_paged(cache_l, k, v, pos, policy.kv)
+        elif per_slot:
             cache_l = KV.append_per_slot(cache_l, k, v, pos, policy.kv)
         else:
             cache_l = KV.append(cache_l, k, v, pos, policy.kv)
         win = layer_window(cfg, idx)
-        attn = A.decode_attention(q, cache_l, policy.kv, pos, window=win,
-                                  impl="fused" if impl != "pallas" else impl)
+        attn = C.attend_decode(q, cache_l, policy.kv, pos, window=win,
+                               impl="fused" if impl != "pallas" else impl)
         xc = xc + C.linear(attn.reshape(B, T, -1), lp["wo"], policy, impl)
         h2 = C.rms_norm(xc, lp["ln2"], cfg.norm_eps)
         xc = xc + ffn(h2, lp, cfg, policy, impl)

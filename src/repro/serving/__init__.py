@@ -1,3 +1,6 @@
 from .engine import Engine, quantize_params, percentile_stats  # noqa: F401
 from .request import Request, SamplingParams, Status           # noqa: F401
 from .scheduler import Scheduler                               # noqa: F401
+
+from repro.core.paged_kvcache import (                         # noqa: F401
+    BlockAllocator, OutOfBlocksError, PagedKVCache)

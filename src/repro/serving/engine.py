@@ -1,12 +1,28 @@
 """Serving engine: continuous batching over the mixed-precision model API.
 
-The engine owns one batched quantized KV cache (B = n_slots).  Per
-iteration it (i) admits waiting requests into free slots by running a
-padded single-slot prefill and splicing the resulting cache slice into the
-batch cache, then (ii) runs one batched decode step for all occupied slots
-with per-slot positions, samples per-slot tokens, and retires finished
-requests.  Prefill and decode are each a single jit'd function, compiled
-once per (prompt-bucket) shape.
+The engine owns one batched quantized KV store (B = n_slots) in one of two
+backends:
+
+* ``cache_kind="dense"`` — the reference path: one ``(n_slots, max_seq)``
+  slab per precision format (core/kvcache.py).
+* ``cache_kind="paged"`` — block-pooled storage (core/paged_kvcache.py):
+  a shared pool of ``block_size``-token blocks, a per-slot block table,
+  and a host-side :class:`BlockAllocator`.  Admission is gated on free
+  blocks (the scheduler's ``admit_gate``) and a request's blocks are
+  reclaimed when it retires, so resident KV memory scales with *live
+  context*, not ``n_slots × max_seq``.
+
+Prompt ingestion is **chunked ragged prefill** for every KV-cache family:
+the true prompt (no bucket padding, no pad tokens) is pushed through
+multi-token decode steps of ``prefill_chunk`` tokens against a small B=1
+staging cache, then the already-quantized staging KV is spliced (dense) or
+block-scattered (paged) into the batch store.  Both backends run the same
+staging computation and the decode kernels consume a dense per-slot view
+either way, so the two engines produce **bit-identical greedy streams**
+(locked down by tests/test_engine_paged.py).  The old left-padded
+prompt-bucket prefill and its pad-token/causal-mask workaround are gone;
+recurrent-state and modality-stub families (no KV cache to page / extra
+encoder inputs) use an exact-length one-shot prefill instead.
 
 The KV cache stays in the policy's low-bit format end-to-end (the paper's
 attention pipeline); weights may be offline-packed (GEMM pipeline) by
@@ -14,19 +30,21 @@ calling ``quantize_params`` before construction.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import kvcache as KV
+from repro.core import paged_kvcache as PKV
 from repro.core.precision import PrecisionPolicy, get_policy
 from repro.models import common as C
 from repro.models.registry import Model, build
 
-from .request import Request, SamplingParams, Status
+from .request import Request, SamplingParams
 from .scheduler import Scheduler
 
 
@@ -61,7 +79,9 @@ def _slot_insert(batch_cache, slot_cache, slot: jax.Array):
     """Write a B=1 cache pytree into the batched cache at ``slot``.
 
     Every cache leaf across all families carries batch at axis 1
-    (leaves are stacked (L, B, ...) by construction)."""
+    (leaves are stacked (L, B, ...) by construction).  The staging cache
+    may be shorter than the slab along sequence axes; the splice writes
+    its extent and leaves the tail untouched (causally masked)."""
     def ins(buf, val):
         idx = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)) + \
             tuple(jnp.zeros((), jnp.int32) for _ in range(buf.ndim - 2))
@@ -73,8 +93,17 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params=None,
                  policy: Optional[PrecisionPolicy] = None,
                  n_slots: int = 4, max_seq: int = 256,
-                 prompt_buckets: tuple = (32, 128),
-                 decode_impl: str = "fused", seed: int = 0):
+                 prompt_buckets: tuple = (32, 128), seed: int = 0,
+                 cache_kind: str = "dense", block_size: int = 16,
+                 n_blocks: Optional[int] = None, prefill_chunk: int = 32):
+        """``prompt_buckets`` is a legacy knob: its maximum still bounds
+        admissible prompt length, but prompts are no longer padded to a
+        bucket — prefill is ragged/chunked.
+
+        Paged knobs: ``block_size`` tokens per KV block; ``n_blocks``
+        pool blocks shared by all slots (default: dense-capacity parity,
+        ``n_slots * max_seq / block_size`` — shrink it to hold more slots
+        than a dense slab of equal memory could)."""
         self.cfg = cfg
         self.policy = policy or get_policy()
         self.model: Model = build(cfg)
@@ -84,17 +113,63 @@ class Engine:
         self.params = quantize_params(raw, self.policy)
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.prompt_buckets = tuple(sorted(prompt_buckets))
-        self.scheduler = Scheduler(n_slots, self.prompt_buckets[-1])
-        self.cache = self.model.init_cache(self.policy, n_slots, max_seq)
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.max_prompt = max(prompt_buckets) if prompt_buckets else max_seq
+        assert self.max_prompt <= max_seq, (self.max_prompt, max_seq)
+        # staging cache length: block-aligned so a paged scatter never
+        # splits a block; identical for both backends so their prefill
+        # graphs (and therefore greedy streams) match bit-for-bit.  The
+        # max_seq clamp only binds for dense engines with a non-block-
+        # aligned max_seq (paged asserts divisibility below).
+        self._staging_len = min(
+            -(-self.max_prompt // block_size) * block_size, max_seq)
+        self._extra = self.model.extra_inputs(jax.random.fold_in(key, 2), 1)
+        self._has_extra = bool(self._extra)
+
+        self._paged = cache_kind == "paged"
+        if self._paged:
+            if self.model.init_paged_cache is None:
+                raise ValueError(
+                    f"family {cfg.family!r} has no KV cache to page")
+            if self._has_extra:
+                raise ValueError(
+                    "paged cache does not support modality-stub families "
+                    "(their prefill consumes extra encoder inputs)")
+            if max_seq % block_size:
+                raise ValueError(
+                    f"max_seq={max_seq} must be a multiple of "
+                    f"block_size={block_size} for the paged cache")
+            self.blocks_per_slot = max_seq // block_size
+            self.n_blocks = (n_blocks if n_blocks is not None
+                             else n_slots * self.blocks_per_slot)
+            self.allocator = PKV.BlockAllocator(self.n_blocks)
+            self._block_map: Dict[int, List[int]] = {}
+            self.cache = self.model.init_paged_cache(
+                self.policy, n_slots, self.n_blocks, block_size,
+                self.blocks_per_slot)
+            gate = self._admit_gate
+        elif cache_kind == "dense":
+            self.cache = self.model.init_cache(self.policy, n_slots, max_seq)
+            gate = None
+        else:
+            raise ValueError(f"unknown cache_kind {cache_kind!r}")
+        self.cache_kind = cache_kind
+        self._kv_family = isinstance(
+            self.cache, (KV.KVCache, PKV.PagedKVCache))
+        self._chunked = self._kv_family and not self._has_extra
+
+        self.scheduler = Scheduler(n_slots, self.max_prompt, admit_gate=gate)
         self.positions = jnp.zeros((n_slots,), jnp.int32)
         self.last_tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.key = jax.random.fold_in(key, 1)
-        self._extra = self.model.extra_inputs(jax.random.fold_in(key, 2), 1)
         self._next_rid = 0
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn)
+        self._chunk = jax.jit(self._chunk_fn)
         self._insert = jax.jit(_slot_insert)
+        self._scatter = jax.jit(
+            jax.vmap(PKV.scatter_slot, in_axes=(0, 0, None)))
         self.t0 = time.perf_counter()
         self.iteration = 0
 
@@ -103,6 +178,12 @@ class Engine:
     def _prefill_fn(self, params, tokens, cache1, **extra):
         return self.model.prefill(params, self.policy, tokens, cache1,
                                   **extra)
+
+    def _chunk_fn(self, params, tokens, cache1, pos):
+        """One ragged-prefill chunk: T prompt tokens through the decode
+        path (writes quantized KV at pos..pos+T-1, attends causally)."""
+        return self.model.decode_step(params, self.policy, tokens, cache1,
+                                      pos)
 
     def _decode_fn(self, params, tokens, cache, pos, key, temp, top_k):
         from . import sampler as S
@@ -123,38 +204,122 @@ class Engine:
                       params=params or SamplingParams(),
                       arrival_time=self.now() if arrival_time is None
                       else arrival_time)
+        if self._paged and self._blocks_for(req) > self.n_blocks:
+            # infeasible even with the whole pool free: reject now rather
+            # than deadlock the FCFS queue behind an unadmittable head
+            raise ValueError(
+                f"request needs {self._blocks_for(req)} KV blocks "
+                f"(prompt {len(req.prompt)} + max_new "
+                f"{req.params.max_new_tokens}) but the pool has only "
+                f"{self.n_blocks}")
         self._next_rid += 1
         self.scheduler.add(req)
         return req
 
-    def _bucket(self, n: int) -> int:
-        for b in self.prompt_buckets:
-            if n <= b:
-                return b
-        raise ValueError(f"prompt length {n} exceeds largest bucket")
+    # -- paged bookkeeping -------------------------------------------------
+
+    def _blocks_for(self, req: Request) -> int:
+        """Worst-case KV blocks for a request: prompt minus the last token
+        (re-decoded) plus every potential output token, clipped to the
+        context limit.  Reserved at admission so a running request can
+        never stall mid-decode for want of a block (no preemption)."""
+        toks = min(len(req.prompt) - 1 + req.params.max_new_tokens,
+                   self.max_seq)
+        return PKV.blocks_needed(max(toks, 1), self.block_size)
+
+    def _admit_gate(self, req: Request) -> bool:
+        """Admission gate with *reservation* semantics: returning True
+        also allocates the request's worst-case blocks, so admitting
+        several requests in one scheduler pass can never over-commit the
+        pool (each gate call sees the allocator state left by the
+        previous admission)."""
+        need = self._blocks_for(req)
+        if not self.allocator.can_alloc(need):
+            return False
+        self._block_map[req.rid] = self.allocator.alloc(need)
+        return True
+
+    def _map_slot_blocks(self, slot: int, blocks: List[int]) -> None:
+        row = jnp.full((self.blocks_per_slot,), self.n_blocks, jnp.int32)
+        if blocks:
+            row = row.at[:len(blocks)].set(jnp.asarray(blocks, jnp.int32))
+        tbl = self.cache.block_table.at[:, slot].set(row)
+        self.cache = dataclasses.replace(self.cache, block_table=tbl)
+
+    def _reclaim(self, req: Request) -> None:
+        self.allocator.free(self._block_map.pop(req.rid))
+        self._map_slot_blocks(req.slot, [])   # sentinel row: writes dropped
+
+    # -- prefill -----------------------------------------------------------
 
     def _do_prefill(self, req: Request) -> None:
-        P = self._bucket(len(req.prompt))
-        # left-pad to the bucket with token 0; positions are absolute so we
-        # instead right-align by prefilling the unpadded prompt into a
-        # right-padded buffer and treating pad tokens as prompt prefix of
-        # token 0 (harmless for synthetic serving; real deployments use
-        # ragged prefill).
-        toks = jnp.zeros((1, P), jnp.int32).at[0, :len(req.prompt)].set(
-            jnp.asarray(req.prompt, jnp.int32))
-        cache1 = self.model.init_cache(self.policy, 1, self.max_seq)
-        logits, cache1 = self._prefill(self.params, toks, cache1,
-                                       **self._extra)
-        # Prefill logits correspond to the last *bucket* position (pad), so
-        # we discard them and re-decode the last real token at its own
-        # position: the append overwrites that position's KV with identical
-        # values and the causal mask (kpos <= qpos) hides every stale pad
-        # entry — each pad slot is overwritten by a fresh decode append one
-        # step before it would become visible.
-        self.cache = self._insert(self.cache, cache1, req.slot)
-        self.positions = self.positions.at[req.slot].set(len(req.prompt) - 1)
+        """Admit one request: write its prompt KV/state into the slot.
+
+        Protocol (unchanged from the dense engine): the last prompt token
+        is *not* consumed here — the slot is left at ``pos = n - 1`` with
+        ``last_tokens = prompt[-1]`` and the next engine iteration decodes
+        it, producing the first output token."""
+        n = len(req.prompt)
+        if self._paged:
+            # blocks were reserved by the admission gate
+            self._map_slot_blocks(req.slot, self._block_map[req.rid])
+        if n > 1 and self._chunked:
+            # chunked ragged prefill: true prompt length, no pad tokens
+            cache1 = self.model.init_cache(self.policy, 1, self._staging_len)
+            s = 0
+            while s < n - 1:
+                t = min(self.prefill_chunk, n - 1 - s)
+                toks = jnp.asarray(req.prompt[s:s + t], jnp.int32)[None]
+                _, cache1 = self._chunk(self.params, toks, cache1,
+                                        jnp.int32(s))
+                s += t
+            if self._paged:
+                self.cache = self._scatter(self.cache, cache1, req.slot)
+            else:
+                self.cache = self._insert(self.cache, cache1, req.slot)
+        elif n > 1 or self._has_extra:
+            # one-shot exact-length prefill: recurrent-state families (no
+            # multi-token decode) and modality-stub families (extra
+            # encoder inputs are consumed by prefill).  P >= 1 keeps
+            # encoder caches built even for single-token prompts.
+            # Exact length means one XLA compile per distinct prompt
+            # length — correctness over compile count: padding would
+            # pollute recurrent state (the old bucket hack this PR
+            # removed).  KV families stay shape-bounded via chunking.
+            P = max(n - 1, 1)
+            toks = jnp.asarray(req.prompt[:P], jnp.int32)[None]
+            cache1 = self.model.init_cache(self.policy, 1, self.max_seq)
+            _, cache1 = self._prefill(self.params, toks, cache1,
+                                      **self._extra)
+            self.cache = self._insert(self.cache, cache1, req.slot)
+        elif not self._kv_family:
+            # single-token prompt into a recurrent family: reset the
+            # slot's state (stale state is not masked by any causal mask)
+            cache1 = self.model.init_cache(self.policy, 1, self.max_seq)
+            self.cache = self._insert(self.cache, cache1, req.slot)
+        # KV families with n == 1 write nothing: stale slot entries are
+        # causally masked (kpos <= pos) and overwritten by decode appends
+        # before they could become visible.
+        self.positions = self.positions.at[req.slot].set(n - 1)
         self.last_tokens = self.last_tokens.at[req.slot, 0].set(
             req.prompt[-1])
+
+    # -- main loop ---------------------------------------------------------
+
+    def _has_room(self, req: Request, pos_next: int) -> bool:
+        """True while the slot can absorb another decode append.
+
+        The context-limit guard (``pos_next < max_seq - 1``) is shared by
+        both backends; paged slots additionally require the next write to
+        land inside the blocks reserved at admission — by construction
+        that never binds before ``max_new_tokens`` does, so the two
+        backends retire requests on identical iterations."""
+        if pos_next >= self.max_seq - 1:
+            return False
+        if self._paged:
+            cap = len(self._block_map[req.rid]) * self.block_size
+            return pos_next < cap
+        return True
 
     def step(self) -> List[Request]:
         """One engine iteration: admit + prefill new, decode all, retire.
@@ -188,9 +353,11 @@ class Engine:
                 r.first_token_time = t
             r.output.append(tok)
             eos = r.params.eos_id is not None and tok == r.params.eos_id
-            room = int(self.positions[r.slot]) < self.max_seq - 1
+            room = self._has_room(r, int(self.positions[r.slot]))
             if eos or len(r.output) >= r.params.max_new_tokens or not room:
                 self.scheduler.finish(r, t)
+                if self._paged:
+                    self._reclaim(r)
                 finished.append(r)
         return finished
 
@@ -200,6 +367,12 @@ class Engine:
                 return
             self.step()
         raise RuntimeError("engine did not drain")
+
+    # -- introspection -----------------------------------------------------
+
+    def kv_resident_bytes(self) -> int:
+        """Resident bytes of the KV store (pool/slab + scales + tables)."""
+        return PKV.kv_bytes(self.cache)
 
 
 def percentile_stats(vals: List[float]) -> Dict[str, float]:

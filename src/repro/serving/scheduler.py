@@ -4,12 +4,20 @@ FCFS admission into a fixed pool of decode slots: whenever a slot frees,
 the oldest waiting request is prefilled into it; every engine iteration
 decodes all occupied slots together.  This is the serving discipline the
 paper's end-to-end evaluation (vLLM-style) assumes.
+
+With a paged KV cache the slot pool is no longer the only capacity
+dimension: admission is additionally gated on *KV block* availability.
+The engine installs an ``admit_gate`` callback (``req -> bool``, "can the
+block allocator cover this request's worst-case context?"); admission
+stays strictly FCFS — if the queue head doesn't fit, younger requests do
+not jump it (no starvation), they wait for blocks reclaimed when running
+requests retire.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Callable, Deque, List, Optional
 
 from .request import Request, Status
 
@@ -18,6 +26,13 @@ from .request import Request, Status
 class Scheduler:
     n_slots: int
     max_prompt_len: int
+    #: optional block-aware admission gate (paged KV engines): called with
+    #: the queue head exactly once per admitted request; False defers
+    #: admission until resources free up.  The gate has *reservation*
+    #: semantics — returning True may allocate resources for the request
+    #: as a side effect, so multiple admissions in one ``admit()`` pass
+    #: each see the resource state their predecessors left behind.
+    admit_gate: Optional[Callable[[Request], bool]] = None
 
     def __post_init__(self):
         self.waiting: Deque[Request] = deque()
@@ -34,12 +49,19 @@ class Scheduler:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def admit(self) -> List[Request]:
-        """Move waiting requests into free slots; returns newly admitted."""
+        """Move waiting requests into free slots; returns newly admitted.
+
+        FCFS with head-of-line blocking: when the admit gate rejects the
+        queue head (not enough free KV blocks), admission stops for this
+        iteration rather than skipping ahead."""
         admitted = []
         for i in self.free_slots():
             if not self.waiting:
                 break
-            req = self.waiting.popleft()
+            req = self.waiting[0]
+            if self.admit_gate is not None and not self.admit_gate(req):
+                break
+            self.waiting.popleft()
             req.slot, req.status = i, Status.RUNNING
             self.slots[i] = req
             admitted.append(req)

@@ -1,17 +1,19 @@
 """Quantization primitives: round-trips, packing inverses, error bounds.
 
-Includes hypothesis property tests on the system's core invariants:
-int4 pack/unpack is a bijection, and symmetric quantization error is
-bounded by scale/2 per element.
+Includes property-style tests on the system's core invariants — int4
+pack/unpack is a bijection, symmetric quantization error is bounded by
+scale/2 per element, and ``quantize_kv``/``dequantize_kv`` round-trip
+within format-dependent bounds for *every* KV ``FormatSpec`` — driven by
+seeded ``pytest.mark.parametrize`` sweeps (no ``hypothesis`` dependency;
+the tier-1 environment is jax + pytest only).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import quantize as Q
-from repro.core.precision import get_policy
+from repro.core.precision import _KV_FORMATS, get_policy
 
 
 class TestIntQuant:
@@ -82,23 +84,33 @@ class TestActKV:
 
 
 # ---------------------------------------------------------------------------
-# Property-based invariants
+# Property-style invariants (seeded sweeps)
 # ---------------------------------------------------------------------------
 
 
-@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64)
-       .filter(lambda v: len(v) % 2 == 0))
-@settings(max_examples=50, deadline=None)
-def test_prop_pack_bijection(vals):
-    q = jnp.asarray(vals, jnp.int8).reshape(-1, 1)
+@pytest.mark.parametrize("seed,n", [(s, n) for s in range(10)
+                                    for n in (2, 6, 32, 64)])
+def test_prop_pack_bijection(seed, n):
+    """Every even-length int4 vector survives pack → unpack exactly."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.randint(key, (n, 1), -8, 8, jnp.int8)
     p = Q.pack_int4(q, axis=0)
     np.testing.assert_array_equal(np.asarray(Q.unpack_int4(p, 0)),
                                   np.asarray(q))
 
 
-@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
-       st.sampled_from([32, 64, 128]))
-@settings(max_examples=25, deadline=None)
+def test_prop_pack_bijection_exhaustive_pairs():
+    """All 256 (lo, hi) nibble pairs round-trip — the full value space."""
+    lo, hi = jnp.meshgrid(jnp.arange(-8, 8), jnp.arange(-8, 8))
+    q = jnp.stack([lo.ravel(), hi.ravel()], axis=0).astype(jnp.int8)
+    p = Q.pack_int4(q, axis=0)
+    np.testing.assert_array_equal(np.asarray(Q.unpack_int4(p, 0)),
+                                  np.asarray(q))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("group", [32, 64, 128])
+@pytest.mark.parametrize("seed", [0, 1, 2**31 - 1])
 def test_prop_quant_error_bound(seed, bits, group):
     key = jax.random.PRNGKey(seed)
     w = jax.random.normal(key, (group * 2, 8), jnp.float32) * \
@@ -108,3 +120,74 @@ def test_prop_quant_error_bound(seed, bits, group):
                                       dtype=jnp.float32)
     bound = np.repeat(np.asarray(scale), group, axis=0) / 2 + 1e-6
     assert np.all(np.abs(np.asarray(w - deq)) <= bound)
+
+
+# ---------------------------------------------------------------------------
+# KV round-trip properties over every FormatSpec
+# ---------------------------------------------------------------------------
+
+#: seeded random (batch, seq, heads, head_dim) shapes; head_dim stays even
+#: so kv4 nibble-packing applies.  Magnitudes sweep 1e-2 .. 1e2 to exercise
+#: scale dynamics.
+_KV_SHAPES = [(1, 1, 1, 2), (2, 3, 4, 8), (1, 16, 2, 64),
+              (3, 5, 1, 128), (2, 2, 8, 32)]
+
+
+@pytest.mark.parametrize("fmt", sorted(_KV_FORMATS))
+@pytest.mark.parametrize("seed,shape",
+                         [(i, s) for i, s in enumerate(_KV_SHAPES)])
+def test_prop_kv_roundtrip_all_formats(fmt, seed, shape):
+    """quantize_kv → dequantize_kv round-trips for every KV FormatSpec:
+    scales are strictly positive and finite, quantized storage has the
+    spec's dtype and (packed) head_dim, and the reconstruction error obeys
+    the format's bound (exact for kv16, scale/2 per element for ints)."""
+    spec = get_policy(f"w16a16{fmt}").kv
+    key = jax.random.PRNGKey(100 + seed)
+    mag = 10.0 ** jax.random.randint(jax.random.fold_in(key, 1), (), -2, 3)
+    kv = (jax.random.normal(key, shape, jnp.float32) * mag) \
+        .astype(jnp.bfloat16)
+    q, scale = Q.quantize_kv(kv, spec)
+
+    assert q.dtype == spec.dtype
+    d_expect = shape[-1] // 2 if spec.packed else shape[-1]
+    assert q.shape == shape[:-1] + (d_expect,)
+    assert scale.shape == shape[:-1] + (1,)
+    s = np.asarray(scale)
+    assert np.all(np.isfinite(s)) and np.all(s > 0)       # scale positivity
+
+    deq = np.asarray(Q.dequantize_kv(q, scale, spec, jnp.float32))
+    ref = np.asarray(kv, np.float32)
+    if fmt == "kv16":
+        np.testing.assert_array_equal(deq, ref)           # pure bf16 cast
+    elif spec.is_float:                                   # kvfp8
+        amax = np.abs(ref).max(axis=-1, keepdims=True)
+        assert np.all(np.abs(deq - ref) <= 0.15 * amax + 1e-6)
+    else:                                                 # kv4 / kv8
+        assert np.all(np.abs(deq - ref) <= s / 2 + 1e-6 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("fmt", sorted(_KV_FORMATS))
+def test_prop_kv_quantize_is_deterministic(fmt):
+    """Same input → bit-identical quantized KV (the paged/dense cache
+    equivalence in serving relies on this)."""
+    spec = get_policy(f"w16a16{fmt}").kv
+    kv = jax.random.normal(jax.random.PRNGKey(7), (2, 4, 2, 16),
+                           jnp.float32).astype(jnp.bfloat16)
+    q1, s1 = Q.quantize_kv(kv, spec)
+    q2, s2 = Q.quantize_kv(kv, spec)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_prop_kv4_pack_unpack_inverse_on_quantized():
+    """The kv4 path's nibble packing is the exact inverse of unpacking on
+    real quantized data (not just synthetic ints)."""
+    spec = get_policy("w16a16kv4").kv
+    kv = jax.random.normal(jax.random.PRNGKey(11), (2, 8, 2, 32),
+                           jnp.float32).astype(jnp.bfloat16)
+    q_packed, scale = Q.quantize_kv(kv, spec)
+    q_vals = Q.unpack_int4(q_packed, axis=q_packed.ndim - 1)
+    assert int(jnp.max(q_vals)) <= 7 and int(jnp.min(q_vals)) >= -7
+    repacked = Q.pack_int4(q_vals, axis=q_vals.ndim - 1)
+    np.testing.assert_array_equal(np.asarray(repacked),
+                                  np.asarray(q_packed))

@@ -2,16 +2,20 @@
 #
 #   make test        tier-1 suite (ROADMAP.md "Tier-1 verify")
 #   make test-fast   tier-1 minus the slow end-to-end/serving modules
+#   make lint        ruff gate (rule set in ruff.toml; used by CI)
 #   make bench       all benchmark tables
 #   make bench-paged paged-vs-dense KV cache benchmark only
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-paged
+.PHONY: test test-fast lint bench bench-paged
 
 test:
 	$(PY) -m pytest -x -q
+
+lint:
+	ruff check src tests benchmarks examples
 
 test-fast:
 	$(PY) -m pytest -x -q --ignore=tests/test_training.py \

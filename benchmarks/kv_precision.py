@@ -9,7 +9,6 @@ bytes once S is large).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.core.precision import get_policy

@@ -21,8 +21,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.precision import get_policy
-from repro.serving import Engine, SamplingParams
+from repro.serving import Engine, EngineConfig, SamplingParams
 
 from .common import Reporter
 
@@ -36,10 +35,10 @@ BLOCK = 8
 
 def _serve(kind: str, slots: int, n_blocks=None):
     cfg = get_reduced(ARCH)
-    eng = Engine(cfg, policy=get_policy(POLICY), n_slots=slots,
-                 max_seq=64, prompt_buckets=(16,), seed=0,
-                 cache_kind=kind, block_size=BLOCK, n_blocks=n_blocks,
-                 prefill_chunk=8)
+    eng = Engine(EngineConfig(model=cfg, policy=POLICY, n_slots=slots,
+                              max_seq=64, max_prompt=16, seed=0,
+                              cache_kind=kind, block_size=BLOCK,
+                              n_blocks=n_blocks, prefill_chunk=8))
     rng = np.random.default_rng(0)
     # warm-up request: trace/compile every prefill-chunk + decode graph
     # before the clock starts, so tokens_per_s is steady-state throughput
@@ -47,16 +46,16 @@ def _serve(kind: str, slots: int, n_blocks=None):
     eng.submit(rng.integers(1, cfg.vocab, PROMPT).tolist(),
                SamplingParams(max_new_tokens=2))
     eng.run_until_idle()
-    reqs = [eng.submit(rng.integers(1, cfg.vocab, PROMPT).tolist(),
-                       SamplingParams(max_new_tokens=NEW))
-            for _ in range(N_REQ)]
+    for _ in range(N_REQ):
+        eng.submit(rng.integers(1, cfg.vocab, PROMPT).tolist(),
+                   SamplingParams(max_new_tokens=NEW))
     peak = 0
+    toks = 0
     t0 = eng.now()
     while not eng.scheduler.idle:
-        eng.step()
+        toks += len(eng.step())
         peak = max(peak, len(eng.scheduler.running()))
     wall = eng.now() - t0
-    toks = sum(len(r.output) for r in reqs)
     return {"kv_resident_bytes": eng.kv_resident_bytes(),
             "tokens_per_s": toks / wall, "concurrent": peak,
             "wall_s": wall}

@@ -9,8 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.precision import get_policy
-from repro.serving import Engine, SamplingParams, percentile_stats
+from repro.serving import (Engine, EngineConfig, SamplingParams,
+                           percentile_stats)
 
 from .common import Reporter
 
@@ -21,28 +21,27 @@ NEW = 12
 
 def _run_engine(policy_name: str, n_req: int, rate: float, slots: int):
     cfg = get_reduced(ARCH)
-    eng = Engine(cfg, policy=get_policy(policy_name), n_slots=slots,
-                 max_seq=64, prompt_buckets=(16,), seed=0)
+    eng = Engine(EngineConfig(model=cfg, policy=policy_name, n_slots=slots,
+                              max_seq=64, max_prompt=16, seed=0))
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_req))
     t0 = eng.now()
-    reqs, nxt = [], 0
-    while len(reqs) < n_req or not eng.scheduler.idle:
+    finished, nxt = [], 0
+    while nxt < n_req or not eng.scheduler.idle:
         now = eng.now() - t0
         while nxt < n_req and arrivals[nxt] <= now:
-            reqs.append(eng.submit(
-                rng.integers(1, cfg.vocab, PROMPT).tolist(),
-                SamplingParams(max_new_tokens=NEW),
-                arrival_time=eng.now()))
+            eng.submit(rng.integers(1, cfg.vocab, PROMPT).tolist(),
+                       SamplingParams(max_new_tokens=NEW),
+                       arrival_time=eng.now())
             nxt += 1
         if eng.scheduler.idle:
             continue
-        eng.step()
+        finished.extend(o for o in eng.step() if o.finished)
     wall = eng.now() - t0
-    toks = sum(len(r.output) for r in reqs)
+    toks = sum(len(o.output_token_ids) for o in finished)
     return {"tput_tok_s": toks / wall,
-            "ttft": percentile_stats([r.ttft for r in reqs]),
-            "latency": percentile_stats([r.latency for r in reqs])}
+            "ttft": percentile_stats([o.ttft for o in finished]),
+            "latency": percentile_stats([o.latency for o in finished])}
 
 
 def run(reporter=None) -> Reporter:

@@ -7,7 +7,6 @@ through the same engine, with per-format latency and logit agreement.
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced

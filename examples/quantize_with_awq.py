@@ -17,9 +17,8 @@ import jax.numpy as jnp
 from repro.configs import get_reduced
 from repro.core import calibration as CAL
 from repro.core import quantize as Q
-from repro.core.packing import pack_prequantized, pack_weight
+from repro.core.packing import pack_prequantized
 from repro.core.precision import get_policy
-from repro.models import common as C
 from repro.models.registry import build
 from repro.training import data as D
 from repro.training.loop import train

@@ -1,48 +1,61 @@
 """End-to-end serving driver (the paper's kind is inference): a small
 model served with continuous batching, mixed-precision weights + KV cache,
 Poisson request arrivals, and the paper's metrics (throughput / TTFT /
-latency percentiles).
+latency percentiles) — all through the streaming serving API
+(EngineConfig / step() → RequestOutput / stream()).
 
     PYTHONPATH=src python examples/serve_continuous_batching.py
 """
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.precision import get_policy
-from repro.serving import Engine, SamplingParams, percentile_stats
+from repro.serving import (Engine, EngineConfig, SamplingParams,
+                           percentile_stats)
 
 ARCH = "smollm-360m"
 N_REQUESTS = 16
 RATE = 4.0          # requests/s, Poisson (paper §5.1 workload model)
 
 cfg = get_reduced(ARCH)
-engine = Engine(cfg, policy=get_policy("w4a16kv8"), n_slots=4,
-                max_seq=96, prompt_buckets=(16,))
+engine = Engine(EngineConfig(model=cfg, policy="w4a16kv8", n_slots=4,
+                             max_seq=96, max_prompt=16))
 print(f"serving {cfg.name} with policy w4a16kv8, "
       f"{engine.n_slots} continuous-batching slots")
 
 rng = np.random.default_rng(0)
 arrivals = np.cumsum(rng.exponential(1.0 / RATE, size=N_REQUESTS))
 t0 = engine.now()
-reqs, nxt = [], 0
-while len(reqs) < N_REQUESTS or not engine.scheduler.idle:
+finished, nxt = [], 0
+while nxt < N_REQUESTS or not engine.scheduler.idle:
     now = engine.now() - t0
     while nxt < N_REQUESTS and arrivals[nxt] <= now:
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 14)).tolist()
-        reqs.append(engine.submit(prompt, SamplingParams(
-            temperature=0.8, top_k=40, max_new_tokens=16)))
+        engine.submit(prompt, SamplingParams(
+            temperature=0.8, top_k=40, max_new_tokens=16))
         nxt += 1
     if not engine.scheduler.idle:
-        for done in engine.step():
-            print(f"  req {done.rid}: prompt {len(done.prompt)} toks → "
-                  f"{len(done.output)} new  "
-                  f"ttft {done.ttft:.3f}s  latency {done.latency:.3f}s")
+        for out in engine.step():
+            if out.finished:
+                finished.append(out)
+                print(f"  req {out.rid}: prompt {out.prompt_len} toks → "
+                      f"{len(out.output_token_ids)} new "
+                      f"({out.finish_reason.value})  "
+                      f"ttft {out.ttft:.3f}s  latency {out.latency:.3f}s")
 
-total = sum(len(r.output) for r in reqs)
+total = sum(len(o.output_token_ids) for o in finished)
 wall = engine.now() - t0
-print(f"\nserved {len(reqs)} requests / {total} tokens in {wall:.2f}s "
+print(f"\nserved {len(finished)} requests / {total} tokens in {wall:.2f}s "
       f"→ {total / wall:.1f} tok/s")
 print("TTFT:   ", {k: f"{v:.3f}s" for k, v in
-                   percentile_stats([r.ttft for r in reqs]).items()})
+                   percentile_stats([o.ttft for o in finished]).items()})
 print("latency:", {k: f"{v:.3f}s" for k, v in
-                   percentile_stats([r.latency for r in reqs]).items()})
+                   percentile_stats([o.latency for o in finished]).items()})
+
+# -- token-by-token streaming (seeded: reproducible across batch mixes) --
+print("\nstreaming one seeded request token-by-token:")
+stream_params = SamplingParams(temperature=0.7, top_k=40,
+                               max_new_tokens=8, seed=1234)
+for out in engine.stream([7, 3, 5, 11], stream_params):
+    tag = f" [{out.finish_reason.value}]" if out.finished else ""
+    print(f"  t={len(out.output_token_ids):2d}  "
+          f"+{out.new_token_ids}{tag}")

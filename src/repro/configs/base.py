@@ -7,7 +7,7 @@ d_model ≤ 512, ≤4-expert member of the same family for CPU smoke tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,4 +28,5 @@ __all__ = [
     "append_paged", "gather_view", "scatter_slot", "blocks_needed",
     "kv_bytes",
     "prefill_attention", "decode_attention", "cross_attention",
+    "flash_attention",
 ]

@@ -19,7 +19,6 @@ bf16 model built here can be quantized end-to-end:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -16,7 +16,6 @@ Three compute paths over the same packed weights:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

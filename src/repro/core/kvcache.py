@@ -14,7 +14,6 @@ launch/sharding.py (heads on "model" when divisible, else sequence-parallel).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -39,7 +39,7 @@ entries at every written position are *bit-identical* to what the dense
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ from repro.configs import ARCHS, SHAPES, get_config
 from repro.core.precision import get_policy
 from repro.models import moe as MOE
 from repro.models.registry import build
-from repro.roofline.analysis import HW, analyze_compiled
+from repro.roofline.analysis import analyze_compiled
 from repro.serving.engine import quantize_params
 from repro.training import optimizer as O
 from repro.training.loop import make_train_step

@@ -2,6 +2,8 @@
 
 Runs the real engine on this host (reduced configs are CPU-feasible);
 reports throughput / TTFT / latency percentiles, the paper's §5 metrics.
+Engine knobs come from :meth:`EngineConfig.add_cli_args` — the same flags
+the serving benchmarks use.
 
 Usage:
     python -m repro.launch.serve --arch smollm-360m --reduced \
@@ -13,68 +15,58 @@ import time
 
 
 def main(argv=None) -> int:
+    from repro.serving import (Engine, EngineConfig, EngineError,
+                               SamplingParams, percentile_stats)
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--policy", default="w4a16kv8")
+    EngineConfig.add_cli_args(ap, max_seq=128)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0, help="req/s (Poisson)")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--cache-kind", choices=("dense", "paged"),
-                    default="dense", help="KV store backend")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per KV block (paged)")
-    ap.add_argument("--n-blocks", type=int, default=None,
-                    help="KV pool blocks (paged; default: dense parity)")
     args = ap.parse_args(argv)
 
     import numpy as np
 
-    from repro.configs import get_config, get_reduced
-    from repro.core.precision import get_policy
-    from repro.serving import Engine, SamplingParams, percentile_stats
-
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    eng = Engine(cfg, policy=get_policy(args.policy), n_slots=args.slots,
-                 max_seq=args.max_seq,
-                 prompt_buckets=(args.prompt_len,), seed=args.seed,
-                 cache_kind=args.cache_kind, block_size=args.block_size,
-                 n_blocks=args.n_blocks)
-    rng = np.random.default_rng(args.seed)
+    try:
+        config = EngineConfig.from_cli(args)
+    except EngineError as e:
+        print(f"invalid engine configuration: {e}", file=sys.stderr)
+        return 2
+    eng = Engine(config)
+    vocab = config.model.vocab
+    rng = np.random.default_rng(config.seed)
     # Poisson arrival schedule (paper §5.1: workload from a Poisson process)
     gaps = rng.exponential(1.0 / args.rate, size=args.requests)
     arrivals = np.cumsum(gaps)
-    reqs = []
+    finished = []
     t_start = eng.now()
-    next_i = 0
-    while len(reqs) < args.requests or not eng.scheduler.idle:
+    submitted = 0
+    while submitted < args.requests or not eng.scheduler.idle:
         now = eng.now() - t_start
-        while next_i < args.requests and arrivals[next_i] <= now:
-            prompt = rng.integers(1, cfg.vocab,
-                                  size=args.prompt_len).tolist()
-            reqs.append(eng.submit(prompt, SamplingParams(
-                temperature=0.7, top_k=40, max_new_tokens=args.max_new)))
-            next_i += 1
+        while submitted < args.requests and arrivals[submitted] <= now:
+            prompt = rng.integers(1, vocab, size=args.prompt_len).tolist()
+            try:
+                eng.submit(prompt, SamplingParams(
+                    temperature=0.7, top_k=40, max_new_tokens=args.max_new))
+            except EngineError as e:
+                print(f"rejected request: {e}", file=sys.stderr)
+            submitted += 1
         if eng.scheduler.idle:
             time.sleep(0.001)
             continue
-        eng.step()
+        finished.extend(o for o in eng.step() if o.finished)
 
-    total_tokens = sum(len(r.output) for r in reqs)
+    total_tokens = sum(len(o.output_token_ids) for o in finished)
     wall = eng.now() - t_start
-    print(f"served {len(reqs)} requests, {total_tokens} tokens "
+    print(f"served {len(finished)} requests, {total_tokens} tokens "
           f"in {wall:.2f}s → {total_tokens / wall:.1f} tok/s")
     print("TTFT percentiles (s):",
           {k: round(v, 3) for k, v in percentile_stats(
-              [r.ttft for r in reqs]).items()})
+              [o.ttft for o in finished]).items()})
     print("latency percentiles (s):",
           {k: round(v, 3) for k, v in percentile_stats(
-              [r.latency for r in reqs]).items()})
+              [o.latency for o in finished]).items()})
     return 0
 
 

@@ -28,10 +28,8 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.kvcache import KVCache
 from repro.core.packing import PackedWeight
 from repro.configs.base import ModelConfig
 

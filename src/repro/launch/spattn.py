@@ -18,8 +18,6 @@ zig-zag permutation fix is noted in DESIGN.md as future work.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P

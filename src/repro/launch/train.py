@@ -35,7 +35,6 @@ def main(argv=None) -> int:
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import get_config, get_reduced
     from repro.models.registry import build

@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.precision import PrecisionPolicy
 
 from . import encdec as ED
 from . import rglru as G
@@ -35,6 +34,14 @@ from . import rwkv6 as R
 from . import transformer as T
 
 VIT_WIDTH = 1024   # stub ViT/InternViT output width (projected to d_model)
+
+#: families whose :func:`build` result exposes ``init_paged_cache`` — the
+#: single source of truth for paged-KV eligibility (serving's
+#: ``EngineConfig`` validates against this so config-level checks cannot
+#: drift from what build() actually wires up).  Recurrent-state families
+#: (ssm/hybrid) have no KV cache to page; audio's prefill consumes extra
+#: encoder inputs.
+PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclasses.dataclass
@@ -75,7 +82,7 @@ def _no_extra(*a, **k) -> Dict[str, Any]:
 
 def build(cfg: ModelConfig) -> Model:
     fam = cfg.family
-    if fam in ("dense", "moe", "vlm"):
+    if fam in PAGED_FAMILIES:
         extra_inputs = _no_extra
         extra_specs = _no_extra
         if cfg.n_img_tokens:

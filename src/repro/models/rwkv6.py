@@ -27,7 +27,7 @@ quantizing an accumulating state would compound error each step
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ bf16 arrays or PackedWeight), KV cache quantized per PrecisionPolicy.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -1,5 +1,7 @@
+from .config import EngineConfig, EngineError                  # noqa: F401
 from .engine import Engine, quantize_params, percentile_stats  # noqa: F401
-from .request import Request, SamplingParams, Status           # noqa: F401
+from .request import (FinishReason, Request, RequestOutput,    # noqa: F401
+                      SamplingParams, Status)
 from .scheduler import Scheduler                               # noqa: F401
 
 from repro.core.paged_kvcache import (                         # noqa: F401

@@ -1,0 +1,176 @@
+"""Engine configuration: one validated dataclass replacing kwarg sprawl.
+
+Every knob the serving engine exposes lives here — model, precision
+policy, cache backend, and capacity — with cross-field validation done
+once at construction instead of scattered across ``Engine.__init__`` and
+its callers.  The CLI front-ends (``launch/serve.py`` and the serving
+benchmarks) build the same object through :meth:`EngineConfig.add_cli_args`
+/ :meth:`EngineConfig.from_cli`, so argparse wiring is written exactly
+once.
+
+Validation failures raise :class:`EngineError` (a ``ValueError``), the
+typed rejection the serving layer uses everywhere a request or config is
+refused — callers can catch one exception type and surface a clean error
+instead of a crash or an ``assert`` that vanishes under ``python -O``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Optional, Union
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy, get_policy
+from repro.models.registry import PAGED_FAMILIES
+
+
+class EngineError(ValueError):
+    """Typed rejection from the serving layer: invalid configuration or
+    an inadmissible request.  Subclasses ``ValueError`` so existing
+    ``except ValueError`` call sites keep working."""
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Validated serving-engine configuration.
+
+    ``policy`` accepts either a :class:`PrecisionPolicy` or a policy name
+    (``"w4a16kv8"``); ``None`` resolves to the default policy.
+
+    Capacity knobs: ``n_slots`` decode slots batched per iteration;
+    ``max_seq`` tokens of context per slot; ``max_prompt`` admissible
+    prompt length (defaults to ``max_seq``); ``prefill_chunk`` tokens per
+    ragged-prefill step.
+
+    Paged knobs: ``block_size`` tokens per KV block; ``n_blocks`` pool
+    blocks shared by all slots (default: dense-capacity parity,
+    ``n_slots * max_seq / block_size`` — shrink it to hold more slots
+    than a dense slab of equal memory could).
+    """
+
+    model: ModelConfig
+    policy: Union[PrecisionPolicy, str, None] = None
+    n_slots: int = 4
+    max_seq: int = 256
+    max_prompt: Optional[int] = None
+    seed: int = 0
+    cache_kind: str = "dense"
+    block_size: int = 16
+    n_blocks: Optional[int] = None
+    prefill_chunk: int = 32
+
+    def __post_init__(self):
+        if not isinstance(self.model, ModelConfig):
+            raise EngineError(
+                f"model must be a ModelConfig, got {type(self.model)!r}")
+        if isinstance(self.policy, str) or self.policy is None:
+            try:
+                self.policy = (get_policy(self.policy)
+                               if self.policy is not None else get_policy())
+            except ValueError as e:
+                raise EngineError(f"invalid policy: {e}") from e
+
+        for name in ("n_slots", "max_seq", "block_size", "prefill_chunk"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise EngineError(f"{name} must be a positive int, got {v!r}")
+        if self.cache_kind not in ("dense", "paged"):
+            raise EngineError(
+                f"unknown cache_kind {self.cache_kind!r} "
+                "(expected 'dense' or 'paged')")
+
+        # prompt bounds: prompts longer than a slot's context can never run
+        if self.max_prompt is None:
+            self.max_prompt = self.max_seq
+        if not isinstance(self.max_prompt, int) or self.max_prompt < 1:
+            raise EngineError(
+                f"max_prompt must be a positive int, got {self.max_prompt!r}")
+        if self.max_prompt > self.max_seq:
+            raise EngineError(
+                f"max_prompt={self.max_prompt} exceeds max_seq={self.max_seq}")
+
+        if self.cache_kind == "paged":
+            # block alignment: the block table maps whole blocks only
+            if self.max_seq % self.block_size:
+                raise EngineError(
+                    f"max_seq={self.max_seq} must be a multiple of "
+                    f"block_size={self.block_size} for the paged cache")
+            if self.n_blocks is not None and (
+                    not isinstance(self.n_blocks, int) or self.n_blocks < 1):
+                raise EngineError(
+                    f"n_blocks must be a positive int, got {self.n_blocks!r}")
+            # paged-family checks (previously buried in Engine.__init__)
+            if self.model.family not in PAGED_FAMILIES:
+                raise EngineError(
+                    f"family {self.model.family!r} has no KV cache to page")
+            if self.model.n_img_tokens:
+                raise EngineError(
+                    "paged cache does not support modality-stub families "
+                    "(their prefill consumes extra encoder inputs)")
+
+    # -- derived capacity --------------------------------------------------
+
+    @property
+    def blocks_per_slot(self) -> int:
+        return self.max_seq // self.block_size
+
+    @property
+    def pool_blocks(self) -> int:
+        """Actual pool size: ``n_blocks`` or dense-capacity parity."""
+        if self.n_blocks is not None:
+            return self.n_blocks
+        return self.n_slots * self.blocks_per_slot
+
+    # -- CLI wiring --------------------------------------------------------
+
+    @staticmethod
+    def add_cli_args(ap: argparse.ArgumentParser,
+                     **defaults) -> argparse.ArgumentParser:
+        """Install the engine's knobs on an argparse parser (one place,
+        shared by serve.py and the benchmarks).  ``defaults`` overrides
+        the per-flag default values (e.g. ``max_seq=128``)."""
+        d = dict(arch="smollm-360m", policy="w4a16kv8", slots=4,
+                 max_seq=256, max_prompt=None, seed=0, cache_kind="dense",
+                 block_size=16, n_blocks=None, prefill_chunk=32)
+        d.update(defaults)
+        ap.add_argument("--arch", default=d["arch"])
+        ap.add_argument("--reduced", action="store_true", default=True)
+        ap.add_argument("--full", dest="reduced", action="store_false")
+        ap.add_argument("--policy", default=d["policy"])
+        ap.add_argument("--slots", type=int, default=d["slots"],
+                        help="continuous-batching decode slots")
+        ap.add_argument("--max-seq", type=int, default=d["max_seq"],
+                        help="context tokens per slot")
+        ap.add_argument("--max-prompt", type=int, default=d["max_prompt"],
+                        help="admissible prompt length (default: max-seq)")
+        ap.add_argument("--seed", type=int, default=d["seed"])
+        ap.add_argument("--cache-kind", choices=("dense", "paged"),
+                        default=d["cache_kind"], help="KV store backend")
+        ap.add_argument("--block-size", type=int, default=d["block_size"],
+                        help="tokens per KV block (paged)")
+        ap.add_argument("--n-blocks", type=int, default=d["n_blocks"],
+                        help="KV pool blocks (paged; default: dense parity)")
+        ap.add_argument("--prefill-chunk", type=int,
+                        default=d["prefill_chunk"],
+                        help="tokens per ragged-prefill step")
+        return ap
+
+    @classmethod
+    def from_cli(cls, args: argparse.Namespace) -> "EngineConfig":
+        """Build a validated config from a namespace produced by a parser
+        that went through :meth:`add_cli_args`.  Raises
+        :class:`EngineError` for unknown arch names like every other
+        validation failure."""
+        from repro.configs import ARCHS, get_config, get_reduced
+        try:
+            model = (get_reduced(args.arch) if args.reduced
+                     else get_config(args.arch))
+        except (ImportError, KeyError, AttributeError) as e:
+            raise EngineError(
+                f"unknown arch {args.arch!r} "
+                f"(known: {', '.join(ARCHS)})") from e
+        return cls(model=model, policy=args.policy, n_slots=args.slots,
+                   max_seq=args.max_seq, max_prompt=args.max_prompt,
+                   seed=args.seed, cache_kind=args.cache_kind,
+                   block_size=args.block_size, n_blocks=args.n_blocks,
+                   prefill_chunk=args.prefill_chunk)

@@ -1,5 +1,22 @@
 """Serving engine: continuous batching over the mixed-precision model API.
 
+Public surface (the redesigned serving API):
+
+* :class:`~repro.serving.config.EngineConfig` — one validated dataclass
+  holding every knob (model, policy, cache backend, capacity); invalid
+  combinations raise :class:`~repro.serving.config.EngineError` before any
+  device memory is touched.
+* ``submit(prompt, params) -> rid`` — enqueue a request; typed rejection
+  (``EngineError``) for over-long prompts and pool-infeasible requests.
+* ``step() -> List[RequestOutput]`` — one engine iteration; every running
+  request yields an immutable :class:`~repro.serving.request.RequestOutput`
+  snapshot (delta tokens, cumulative output, finish reason) instead of
+  having its ``Request`` mutated behind the caller's back.
+* ``generate(prompts, params)`` / ``stream(prompt, params)`` — batch and
+  incremental conveniences built on ``step()``.
+* ``abort(rid)`` — cancel a waiting or running request; a running paged
+  request's KV blocks are reclaimed immediately.
+
 The engine owns one batched quantized KV store (B = n_slots) in one of two
 backends:
 
@@ -19,10 +36,16 @@ staging cache, then the already-quantized staging KV is spliced (dense) or
 block-scattered (paged) into the batch store.  Both backends run the same
 staging computation and the decode kernels consume a dense per-slot view
 either way, so the two engines produce **bit-identical greedy streams**
-(locked down by tests/test_engine_paged.py).  The old left-padded
-prompt-bucket prefill and its pad-token/causal-mask workaround are gone;
-recurrent-state and modality-stub families (no KV cache to page / extra
-encoder inputs) use an exact-length one-shot prefill instead.
+(locked down by tests/test_engine_paged.py).  Recurrent-state and
+modality-stub families (no KV cache to page / extra encoder inputs) use
+an exact-length one-shot prefill instead.
+
+Sampling is per-slot end-to-end: each request carries its own RNG stream
+(``fold_in(PRNGKey(request seed), decode step)``), so seeded requests are
+reproducible regardless of batch composition.  Decode positions are
+tracked host-side (they advance deterministically) — the device
+``positions`` array exists only for the kernels, and the main loop's sole
+device→host sync per iteration is the sampled-token fetch.
 
 The KV cache stays in the policy's low-bit format end-to-end (the paper's
 attention pipeline); weights may be offline-packed (GEMM pipeline) by
@@ -32,19 +55,21 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core import kvcache as KV
 from repro.core import paged_kvcache as PKV
-from repro.core.precision import PrecisionPolicy, get_policy
+from repro.core.precision import PrecisionPolicy
 from repro.models import common as C
 from repro.models.registry import Model, build
 
-from .request import Request, SamplingParams
+from .config import EngineConfig, EngineError
+from .request import (FinishReason, Request, RequestOutput, SamplingParams,
+                      Status)
 from .scheduler import Scheduler
 
 
@@ -90,80 +115,67 @@ def _slot_insert(batch_cache, slot_cache, slot: jax.Array):
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params=None,
-                 policy: Optional[PrecisionPolicy] = None,
-                 n_slots: int = 4, max_seq: int = 256,
-                 prompt_buckets: tuple = (32, 128), seed: int = 0,
-                 cache_kind: str = "dense", block_size: int = 16,
-                 n_blocks: Optional[int] = None, prefill_chunk: int = 32):
-        """``prompt_buckets`` is a legacy knob: its maximum still bounds
-        admissible prompt length, but prompts are no longer padded to a
-        bucket — prefill is ragged/chunked.
-
-        Paged knobs: ``block_size`` tokens per KV block; ``n_blocks``
-        pool blocks shared by all slots (default: dense-capacity parity,
-        ``n_slots * max_seq / block_size`` — shrink it to hold more slots
-        than a dense slab of equal memory could)."""
-        self.cfg = cfg
-        self.policy = policy or get_policy()
+    def __init__(self, config: EngineConfig, params=None):
+        self.config = config
+        cfg = config.model
+        self.model_cfg = cfg
+        self.policy: PrecisionPolicy = config.policy
         self.model: Model = build(cfg)
-        key = jax.random.PRNGKey(seed)
+        key = jax.random.PRNGKey(config.seed)
         raw = params if params is not None else self.model.init_params(key)
         # offline GEMM pipeline stage (no-op for w16)
         self.params = quantize_params(raw, self.policy)
-        self.n_slots = n_slots
-        self.max_seq = max_seq
-        self.block_size = block_size
-        self.prefill_chunk = prefill_chunk
-        self.max_prompt = max(prompt_buckets) if prompt_buckets else max_seq
-        assert self.max_prompt <= max_seq, (self.max_prompt, max_seq)
+        self.n_slots = config.n_slots
+        self.max_seq = config.max_seq
+        self.block_size = config.block_size
+        self.prefill_chunk = config.prefill_chunk
+        self.max_prompt = config.max_prompt
         # staging cache length: block-aligned so a paged scatter never
         # splits a block; identical for both backends so their prefill
         # graphs (and therefore greedy streams) match bit-for-bit.  The
         # max_seq clamp only binds for dense engines with a non-block-
-        # aligned max_seq (paged asserts divisibility below).
+        # aligned max_seq (EngineConfig enforces divisibility for paged).
         self._staging_len = min(
-            -(-self.max_prompt // block_size) * block_size, max_seq)
+            -(-self.max_prompt // self.block_size) * self.block_size,
+            self.max_seq)
         self._extra = self.model.extra_inputs(jax.random.fold_in(key, 2), 1)
         self._has_extra = bool(self._extra)
 
-        self._paged = cache_kind == "paged"
+        self._paged = config.cache_kind == "paged"
         if self._paged:
-            if self.model.init_paged_cache is None:
-                raise ValueError(
-                    f"family {cfg.family!r} has no KV cache to page")
-            if self._has_extra:
-                raise ValueError(
-                    "paged cache does not support modality-stub families "
-                    "(their prefill consumes extra encoder inputs)")
-            if max_seq % block_size:
-                raise ValueError(
-                    f"max_seq={max_seq} must be a multiple of "
-                    f"block_size={block_size} for the paged cache")
-            self.blocks_per_slot = max_seq // block_size
-            self.n_blocks = (n_blocks if n_blocks is not None
-                             else n_slots * self.blocks_per_slot)
+            # family/shape feasibility was validated by EngineConfig
+            self.blocks_per_slot = config.blocks_per_slot
+            self.n_blocks = config.pool_blocks
             self.allocator = PKV.BlockAllocator(self.n_blocks)
             self._block_map: Dict[int, List[int]] = {}
             self.cache = self.model.init_paged_cache(
-                self.policy, n_slots, self.n_blocks, block_size,
+                self.policy, self.n_slots, self.n_blocks, self.block_size,
                 self.blocks_per_slot)
             gate = self._admit_gate
-        elif cache_kind == "dense":
-            self.cache = self.model.init_cache(self.policy, n_slots, max_seq)
-            gate = None
         else:
-            raise ValueError(f"unknown cache_kind {cache_kind!r}")
-        self.cache_kind = cache_kind
+            self.cache = self.model.init_cache(self.policy, self.n_slots,
+                                               self.max_seq)
+            gate = None
+        self.cache_kind = config.cache_kind
         self._kv_family = isinstance(
             self.cache, (KV.KVCache, PKV.PagedKVCache))
         self._chunked = self._kv_family and not self._has_extra
 
-        self.scheduler = Scheduler(n_slots, self.max_prompt, admit_gate=gate)
-        self.positions = jnp.zeros((n_slots,), jnp.int32)
-        self.last_tokens = jnp.zeros((n_slots, 1), jnp.int32)
-        self.key = jax.random.fold_in(key, 1)
+        self.scheduler = Scheduler(self.n_slots, admit_gate=gate)
+        self.positions = jnp.zeros((self.n_slots,), jnp.int32)
+        self.last_tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         self._next_rid = 0
+        #: live (waiting or running) requests by rid — retired/aborted
+        #: requests are dropped once their final RequestOutput is emitted
+        self._requests: Dict[int, Request] = {}
+        #: finished outputs of directly-submitted requests that retired
+        #: while generate()/stream() was driving the engine for someone
+        #: else; drained (returned) by the next run_until_idle()
+        self._unclaimed: List[RequestOutput] = []
+        #: per-rid output queues for live stream() iterators: step()
+        #: routes a subscribed rid's outputs here so interleaved streams
+        #: (each driving step() on its own schedule) never lose tokens
+        self._stream_bufs: Dict[int, List[RequestOutput]] = {}
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn)
         self._chunk = jax.jit(self._chunk_fn)
@@ -185,11 +197,12 @@ class Engine:
         return self.model.decode_step(params, self.policy, tokens, cache1,
                                       pos)
 
-    def _decode_fn(self, params, tokens, cache, pos, key, temp, top_k):
+    def _decode_fn(self, params, tokens, cache, pos, seeds, steps, temp,
+                   top_k):
         from . import sampler as S
         logits, cache = self.model.decode_step(params, self.policy, tokens,
                                                cache, pos)
-        nxt = S.sample(key, logits, temp, top_k)
+        nxt = S.sample(S.slot_keys(seeds, steps), logits, temp, top_k)
         return nxt, cache
 
     # -- public API --------------------------------------------------------
@@ -197,24 +210,71 @@ class Engine:
     def now(self) -> float:
         return time.perf_counter() - self.t0
 
-    def submit(self, prompt: List[int],
+    def submit(self, prompt: Sequence[int],
                params: Optional[SamplingParams] = None,
-               arrival_time: Optional[float] = None) -> Request:
-        req = Request(rid=self._next_rid, prompt=list(prompt),
-                      params=params or SamplingParams(),
+               arrival_time: Optional[float] = None) -> int:
+        """Enqueue a request; returns its rid (the handle for ``abort``
+        and for matching ``step()`` outputs).  Inadmissible requests are
+        rejected here with :class:`EngineError` — a clean typed refusal,
+        never a mid-decode crash."""
+        prompt = list(prompt)
+        if not prompt:
+            raise EngineError("prompt must contain at least one token")
+        if len(prompt) > self.max_prompt:
+            raise EngineError(
+                f"prompt length {len(prompt)} exceeds max_prompt="
+                f"{self.max_prompt}")
+        params = params or SamplingParams()
+        req = Request(rid=self._next_rid, prompt=prompt, params=params,
                       arrival_time=self.now() if arrival_time is None
-                      else arrival_time)
+                      else arrival_time,
+                      seed=self._resolve_seed(params, self._next_rid))
         if self._paged and self._blocks_for(req) > self.n_blocks:
             # infeasible even with the whole pool free: reject now rather
             # than deadlock the FCFS queue behind an unadmittable head
-            raise ValueError(
+            raise EngineError(
                 f"request needs {self._blocks_for(req)} KV blocks "
                 f"(prompt {len(req.prompt)} + max_new "
                 f"{req.params.max_new_tokens}) but the pool has only "
                 f"{self.n_blocks}")
         self._next_rid += 1
+        self._requests[req.rid] = req
         self.scheduler.add(req)
-        return req
+        return req.rid
+
+    def abort(self, rid: int) -> Optional[RequestOutput]:
+        """Cancel a request.  A waiting request leaves the queue; a
+        running request frees its slot immediately and (paged) returns its
+        KV blocks to the pool.  Returns the final ``finish_reason="abort"``
+        output, or None if the rid is unknown or already finished (abort
+        is idempotent).  Aborted requests emit nothing from ``step()``."""
+        req = self._requests.get(rid)
+        if req is None:
+            return None
+        if req.status == Status.WAITING:
+            self.scheduler.remove_waiting(req)
+            req.status = Status.FINISHED
+            req.finish_time = self.now()
+            # paged: waiting requests hold no blocks (reservation happens
+            # at admission), so there is nothing to reclaim
+        else:
+            self.scheduler.finish(req, self.now())
+            if self._paged:
+                self._reclaim(req)
+            # the freed slot's device state needs no scrub: stale KV is
+            # causally masked and the next occupant's prefill resets
+            # positions/last_tokens for the slot
+        req.finish_reason = FinishReason.ABORT
+        del self._requests[rid]
+        return req.make_output([])
+
+    def _resolve_seed(self, params: SamplingParams, rid: int) -> int:
+        """Explicit ``params.seed`` wins; otherwise derive a fresh
+        per-submission stream from the engine seed and rid."""
+        if params.seed is not None:
+            return int(params.seed) & 0x7FFFFFFF
+        return ((self.config.seed * 1_000_003) ^ (rid * 0x9E3779B1)) \
+            & 0x7FFFFFFF
 
     # -- paged bookkeeping -------------------------------------------------
 
@@ -284,8 +344,8 @@ class Engine:
             # encoder caches built even for single-token prompts.
             # Exact length means one XLA compile per distinct prompt
             # length — correctness over compile count: padding would
-            # pollute recurrent state (the old bucket hack this PR
-            # removed).  KV families stay shape-bounded via chunking.
+            # pollute recurrent state.  KV families stay shape-bounded
+            # via chunking.
             P = max(n - 1, 1)
             toks = jnp.asarray(req.prompt[:P], jnp.int32)[None]
             cache1 = self.model.init_cache(self.policy, 1, self.max_seq)
@@ -300,72 +360,181 @@ class Engine:
         # KV families with n == 1 write nothing: stale slot entries are
         # causally masked (kpos <= pos) and overwritten by decode appends
         # before they could become visible.
+        req.pos = n - 1
         self.positions = self.positions.at[req.slot].set(n - 1)
         self.last_tokens = self.last_tokens.at[req.slot, 0].set(
             req.prompt[-1])
 
     # -- main loop ---------------------------------------------------------
 
-    def _has_room(self, req: Request, pos_next: int) -> bool:
-        """True while the slot can absorb another decode append.
+    def _has_room(self, req: Request) -> bool:
+        """True while the slot can absorb another decode append (uses the
+        host-side position mirror — no device sync).
 
-        The context-limit guard (``pos_next < max_seq - 1``) is shared by
-        both backends; paged slots additionally require the next write to
-        land inside the blocks reserved at admission — by construction
-        that never binds before ``max_new_tokens`` does, so the two
-        backends retire requests on identical iterations."""
-        if pos_next >= self.max_seq - 1:
+        The context-limit guard (``pos < max_seq - 1``) is shared by both
+        backends; paged slots additionally require the next write to land
+        inside the blocks reserved at admission — by construction that
+        never binds before ``max_new_tokens`` does, so the two backends
+        retire requests on identical iterations."""
+        if req.pos >= self.max_seq - 1:
             return False
         if self._paged:
             cap = len(self._block_map[req.rid]) * self.block_size
-            return pos_next < cap
+            return req.pos < cap
         return True
 
-    def step(self) -> List[Request]:
-        """One engine iteration: admit + prefill new, decode all, retire.
+    def _finish_reason(self, req: Request, tok: int) -> \
+            Optional[FinishReason]:
+        """Retirement decision for the token just produced.  eos/stop are
+        suppressed until ``min_new_tokens`` have been produced; the length
+        cap and context exhaustion always bind."""
+        produced = len(req.output)
+        reason = None
+        if produced >= req.params.min_new_tokens:
+            reason = req.params.stops_on(tok)
+        if reason is None and produced >= req.params.max_new_tokens:
+            reason = FinishReason.LENGTH
+        if reason is None and not self._has_room(req):
+            reason = FinishReason.CONTEXT
+        return reason
 
-        Returns requests that finished this iteration."""
+    def step(self) -> List[RequestOutput]:
+        """One engine iteration: admit + prefill new, decode all running
+        slots together, retire finished requests.
+
+        Returns one :class:`RequestOutput` per running request — a delta
+        of exactly one new token plus the cumulative output; finished
+        requests carry ``finish_reason`` and final timing metrics."""
         self.iteration += 1
         for req in self.scheduler.admit():
             self._do_prefill(req)
         running = self.scheduler.running()
-        finished: List[Request] = []
         if not running:
-            return finished
+            return []
 
-        temp = jnp.zeros((self.n_slots,), jnp.float32)
-        top_k = jnp.zeros((self.n_slots,), jnp.int32)
+        # per-slot sampling vectors, assembled host-side (numpy) and
+        # handed to the jit'd decode as four single transfers — no
+        # per-request scatter dispatches in the hot loop
+        temp = np.zeros((self.n_slots,), np.float32)
+        top_k = np.zeros((self.n_slots,), np.int32)
+        seeds = np.zeros((self.n_slots,), np.uint32)
+        steps = np.zeros((self.n_slots,), np.int32)
         for r in running:
-            temp = temp.at[r.slot].set(r.params.temperature)
-            top_k = top_k.at[r.slot].set(r.params.top_k)
+            temp[r.slot] = r.params.temperature
+            top_k[r.slot] = r.params.top_k
+            seeds[r.slot] = r.seed
+            steps[r.slot] = len(r.output)
 
-        self.key, sub = jax.random.split(self.key)
         nxt, self.cache = self._decode(self.params, self.last_tokens,
-                                       self.cache, self.positions, sub,
-                                       temp, top_k)
+                                       self.cache, self.positions, seeds,
+                                       steps, temp, top_k)
         self.positions = self.positions + 1
         self.last_tokens = nxt[:, None]
         t = self.now()
         nxt_host = jax.device_get(nxt)
+        outputs: List[RequestOutput] = []
         for r in running:
             tok = int(nxt_host[r.slot])
             if r.first_token_time is None:
                 r.first_token_time = t
             r.output.append(tok)
-            eos = r.params.eos_id is not None and tok == r.params.eos_id
-            room = self._has_room(r, int(self.positions[r.slot]))
-            if eos or len(r.output) >= r.params.max_new_tokens or not room:
+            r.pos += 1
+            reason = self._finish_reason(r, tok)
+            if reason is not None:
+                r.finish_reason = reason
                 self.scheduler.finish(r, t)
                 if self._paged:
                     self._reclaim(r)
-                finished.append(r)
-        return finished
+                del self._requests[r.rid]
+            out = r.make_output([tok])
+            outputs.append(out)
+            if r.rid in self._stream_bufs:
+                self._stream_bufs[r.rid].append(out)
+        return outputs
 
-    def run_until_idle(self, max_iters: int = 10_000) -> None:
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 params: Union[SamplingParams, Sequence[SamplingParams],
+                               None] = None,
+                 max_iters: int = 100_000) -> List[RequestOutput]:
+        """Batch convenience: submit every prompt, drive ``step()`` until
+        all of them finish, return their final outputs in prompt order.
+        ``params`` is one shared :class:`SamplingParams` or one per
+        prompt.  All-or-nothing: if any prompt is inadmissible, nothing
+        is enqueued (no orphaned requests behind the raised
+        :class:`EngineError`)."""
+        if params is None or isinstance(params, SamplingParams):
+            params = [params] * len(prompts)
+        if len(params) != len(prompts):
+            raise EngineError(
+                f"got {len(params)} SamplingParams for "
+                f"{len(prompts)} prompts")
+        rids: List[int] = []
+        try:
+            for p, sp in zip(prompts, params):
+                rids.append(self.submit(p, sp))
+        except EngineError:
+            for rid in rids:
+                self.abort(rid)
+            raise
+        pending = set(rids)
+        final: Dict[int, RequestOutput] = {}
+        for _ in range(max_iters):
+            if not pending:
+                return [final[rid] for rid in rids]
+            for out in self.step():
+                if not out.finished:
+                    continue
+                if out.rid in pending:
+                    final[out.rid] = out
+                    pending.discard(out.rid)
+                elif out.rid not in self._stream_bufs:
+                    self._unclaimed.append(out)
+        raise RuntimeError("generate() did not drain")
+
+    def stream(self, prompt: Sequence[int],
+               params: Optional[SamplingParams] = None,
+               max_iters: int = 100_000) -> Iterator[RequestOutput]:
+        """Incremental convenience: submit one prompt and yield its
+        :class:`RequestOutput` snapshots (one new token each) as decode
+        iterations complete, until it finishes.  Driving the iterator
+        advances the whole engine, so concurrent requests keep decoding;
+        outputs for *other* live streams are queued to their iterators
+        (interleaving streams never loses tokens) and finished outputs of
+        directly-submitted requests land in the unclaimed buffer — see
+        :meth:`run_until_idle`.  If the request is ``abort()``-ed
+        mid-stream the iterator simply ends (the abort caller got the
+        final output)."""
+        rid = self.submit(prompt, params)
+        buf = self._stream_bufs.setdefault(rid, [])
+        try:
+            for _ in range(max_iters):
+                while buf:
+                    out = buf.pop(0)
+                    yield out
+                    if out.finished:
+                        return
+                if rid not in self._requests:
+                    return
+                for out in self.step():
+                    if out.finished and out.rid not in self._stream_bufs \
+                            and out.rid != rid:
+                        self._unclaimed.append(out)
+            raise RuntimeError("stream() did not finish")
+        finally:
+            self._stream_bufs.pop(rid, None)
+
+    def run_until_idle(self, max_iters: int = 10_000) -> List[RequestOutput]:
+        """Drive ``step()`` until no request is waiting or running;
+        returns the finished outputs in completion order — including any
+        *unclaimed* finals (requests the caller submitted directly that
+        happened to finish while a ``generate()``/``stream()`` call was
+        driving the engine)."""
+        finished, self._unclaimed = self._unclaimed, []
         for _ in range(max_iters):
             if self.scheduler.idle:
-                return
-            self.step()
+                return finished
+            finished.extend(o for o in self.step() if o.finished
+                            and o.rid not in self._stream_bufs)
         raise RuntimeError("engine did not drain")
 
     # -- introspection -----------------------------------------------------
@@ -376,7 +545,6 @@ class Engine:
 
 
 def percentile_stats(vals: List[float]) -> Dict[str, float]:
-    import numpy as np
     if not vals:
         return {}
     a = np.asarray(vals)

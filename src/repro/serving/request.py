@@ -1,9 +1,17 @@
-"""Request objects and lifecycle for the serving engine."""
+"""Request objects, sampling parameters, and streamed outputs.
+
+The engine's public output type is :class:`RequestOutput`: an immutable
+per-iteration snapshot (delta tokens + cumulative output + finish state)
+emitted by ``Engine.step`` — callers never see the engine's internal
+:class:`Request` bookkeeping mutate under them.
+"""
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
+
+from .config import EngineError
 
 
 class Status(enum.Enum):
@@ -12,25 +20,109 @@ class Status(enum.Enum):
     FINISHED = "finished"
 
 
+class FinishReason(str, enum.Enum):
+    """Why a request retired.  ``str``-valued so ``out.finish_reason ==
+    "eos"`` works without importing the enum."""
+    EOS = "eos"            # hit params.eos_id
+    LENGTH = "length"      # produced max_new_tokens
+    STOP = "stop"          # hit one of params.stop_token_ids
+    ABORT = "abort"        # cancelled via Engine.abort
+    CONTEXT = "context"    # slot context (max_seq / reserved blocks) full
+
+
 @dataclasses.dataclass
 class SamplingParams:
-    temperature: float = 0.0      # 0 → greedy
-    top_k: int = 0                # 0 → no top-k truncation
+    """Per-request decode controls.
+
+    ``temperature == 0`` → greedy; ``top_k == 0`` → no truncation.
+    ``eos_id``/``stop_token_ids`` finish a request only after
+    ``min_new_tokens`` tokens have been produced (the stop token itself is
+    included in the output).  ``seed`` pins the request's private RNG
+    stream: two submissions with the same prompt, params, and seed sample
+    identical tokens regardless of what else shares the batch; ``None``
+    draws a fresh stream per submission.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
     max_new_tokens: int = 32
+    min_new_tokens: int = 0
     eos_id: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise EngineError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise EngineError(f"top_k must be >= 0, got {self.top_k}")
+        if self.max_new_tokens < 1:
+            raise EngineError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if not 0 <= self.min_new_tokens <= self.max_new_tokens:
+            raise EngineError(
+                f"min_new_tokens={self.min_new_tokens} must lie in "
+                f"[0, max_new_tokens={self.max_new_tokens}]")
+        if isinstance(self.stop_token_ids, (str, bytes)) or \
+                not isinstance(self.stop_token_ids, Sequence):
+            raise EngineError("stop_token_ids must be a sequence of ints")
+        try:
+            self.stop_token_ids = tuple(int(t) for t in self.stop_token_ids)
+        except (TypeError, ValueError) as e:
+            raise EngineError(
+                f"stop_token_ids must be a sequence of ints: {e}") from e
+
+    def stops_on(self, token: int) -> Optional[FinishReason]:
+        if self.eos_id is not None and token == self.eos_id:
+            return FinishReason.EOS
+        if token in self.stop_token_ids:
+            return FinishReason.STOP
+        return None
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One streamed increment of a request's output.
+
+    ``new_token_ids`` are the tokens produced *this* engine iteration
+    (one per decode step; empty for a pure finish notification such as an
+    abort); ``output_token_ids`` is the cumulative output so far.  When
+    ``finished`` is True, ``finish_reason`` is set and the timing fields
+    carry the request's final metrics.
+    """
+    rid: int
+    prompt_len: int
+    new_token_ids: List[int]
+    output_token_ids: List[int]
+    finished: bool = False
+    finish_reason: Optional[FinishReason] = None
+
+    # final metrics (populated on the finished output) -------------------
+    ttft: Optional[float] = None        # first-token latency (s)
+    latency: Optional[float] = None     # end-to-end latency (s)
 
 
 @dataclasses.dataclass
 class Request:
+    """Engine-internal lifecycle record (not part of the public stream
+    surface; the engine emits :class:`RequestOutput` snapshots instead)."""
     rid: int
     prompt: List[int]
     params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     arrival_time: float = 0.0
+    #: resolved RNG seed for this request's private sampling stream
+    #: (params.seed, or a per-submission default derived by the engine)
+    seed: int = 0
 
     # lifecycle (filled by the engine) ----------------------------------
     status: Status = Status.WAITING
     slot: int = -1
+    #: host-side mirror of the slot's decode position — advanced
+    #: deterministically (prompt_len - 1, then +1 per decode step) so the
+    #: main loop never syncs the device positions array.
+    pos: int = 0
     output: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[FinishReason] = None
     first_token_time: Optional[float] = None    # TTFT measurement
     finish_time: Optional[float] = None
 
@@ -49,3 +141,14 @@ class Request:
     @property
     def done(self) -> bool:
         return self.status == Status.FINISHED
+
+    def make_output(self, new_tokens: List[int]) -> RequestOutput:
+        """Snapshot this request's state as a public RequestOutput."""
+        done = self.done
+        return RequestOutput(
+            rid=self.rid, prompt_len=len(self.prompt),
+            new_token_ids=list(new_tokens),
+            output_token_ids=list(self.output),
+            finished=done, finish_reason=self.finish_reason if done else None,
+            ttft=self.ttft if done else None,
+            latency=self.latency if done else None)

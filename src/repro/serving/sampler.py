@@ -1,7 +1,11 @@
 """Batched token sampling: greedy / temperature / top-k, vectorized per slot.
 
-All sampling parameters arrive as per-slot vectors so one jit'd function
-serves heterogeneous requests in the same continuous batch.
+All sampling inputs arrive as per-slot vectors — including the RNG: each
+slot carries its *own* key stream (derived by the engine from the
+request's seed and its decode-step index), so a request's sampled tokens
+depend only on its prompt, params, and seed, never on which other
+requests share the batch.  One jit'd function serves heterogeneous
+requests in the same continuous batch.
 """
 from __future__ import annotations
 
@@ -9,24 +13,40 @@ import jax
 import jax.numpy as jnp
 
 
-def sample(key: jax.Array, logits: jax.Array, temperature: jax.Array,
-           top_k: jax.Array) -> jax.Array:
-    """logits: (B, V); temperature/top_k: (B,).  Returns (B,) int32.
+def slot_keys(seeds: jax.Array, steps: jax.Array) -> jax.Array:
+    """Per-slot PRNG keys from (B,) request seeds and decode-step indices.
 
-    temperature == 0 → greedy.  top_k == 0 → full distribution.
+    ``fold_in(PRNGKey(seed), step)`` gives every request a private
+    counter-indexed stream: the same (seed, step) pair always yields the
+    same key, regardless of batch composition or engine history.
+    """
+    return jax.vmap(
+        lambda s, t: jax.random.fold_in(jax.random.PRNGKey(s), t)
+    )(seeds, steps)
+
+
+def sample(keys: jax.Array, logits: jax.Array, temperature: jax.Array,
+           top_k: jax.Array) -> jax.Array:
+    """keys: (B,) per-slot PRNG keys (see :func:`slot_keys`); logits:
+    (B, V); temperature/top_k: (B,).  Returns (B,) int32.
+
+    temperature == 0 → greedy.  top_k == 0 (or >= V) → full distribution.
+    Ties at the k-th threshold keep *all* tied logits (mass-preserving:
+    the kept set is ``logits >= k-th largest``, never an arbitrary subset
+    of the tie).
     """
     B, V = logits.shape
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    # top-k mask: keep logits >= k-th largest (k==0 → keep all)
-    k_eff = jnp.where(top_k > 0, top_k, V)
+    # top-k mask: keep logits >= k-th largest (k==0 or k>=V → keep all)
+    k_eff = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V)
     sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]                 # desc
-    thresh = jnp.take_along_axis(
-        sorted_l, jnp.clip(k_eff[:, None] - 1, 0, V - 1), axis=1)  # (B,1)
+    thresh = jnp.take_along_axis(sorted_l, k_eff[:, None] - 1, axis=1)
     masked = jnp.where(logits >= thresh, logits, -jnp.inf)
 
     temp = jnp.maximum(temperature, 1e-6)[:, None]
-    sampled = jax.random.categorical(key, masked / temp, axis=-1) \
-        .astype(jnp.int32)
+    sampled = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row)
+    )(keys, masked / temp).astype(jnp.int32)
     return jnp.where(temperature > 0, sampled, greedy)

@@ -25,7 +25,6 @@ from .request import Request, Status
 @dataclasses.dataclass
 class Scheduler:
     n_slots: int
-    max_prompt_len: int
     #: optional block-aware admission gate (paged KV engines): called with
     #: the queue head exactly once per admitted request; False defers
     #: admission until resources free up.  The gate has *reservation*
@@ -41,9 +40,18 @@ class Scheduler:
     # -- queue ops -------------------------------------------------------
 
     def add(self, req: Request) -> None:
-        assert len(req.prompt) <= self.max_prompt_len, \
-            f"prompt {len(req.prompt)} > max {self.max_prompt_len}"
+        """Enqueue an already-validated request (admissibility — prompt
+        bounds, pool feasibility — is the engine's job at ``submit``)."""
         self.waiting.append(req)
+
+    def remove_waiting(self, req: Request) -> bool:
+        """Drop a not-yet-admitted request from the queue (abort path).
+        Returns False if the request is not waiting."""
+        try:
+            self.waiting.remove(req)
+            return True
+        except ValueError:
+            return False
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]

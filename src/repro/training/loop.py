@@ -8,11 +8,9 @@ pjit, so what we smoke-test on CPU is what we shard on the mesh.
 from __future__ import annotations
 
 import time
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.precision import get_policy
 from repro.models.registry import Model, build

@@ -10,7 +10,6 @@ chips for ≥123B params; adafactor's factored second moment is ~4.1 B/param
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

@@ -11,7 +11,6 @@ import pytest
 from repro.configs import get_config, get_reduced
 from repro.core.precision import get_policy
 from repro.models import common as C
-from repro.models import rwkv6 as R
 from repro.models import transformer as T
 from repro.models.registry import build
 

@@ -2,7 +2,6 @@
 quantization on activation-weighted reconstruction error."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import calibration as CAL

@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import ARCHS, SHAPES
 from repro.launch.dryrun import SKIPS, build_lowerable, list_pairs
-from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.mesh import data_axes
 
 
 def _mesh11():
@@ -68,7 +68,6 @@ class TestBuildLowerable:
         assert cache.k.shape[2] == 32_768        # full-length KV cache
 
     def test_train_uses_bf16_params(self):
-        import jax.numpy as jnp
         mesh = _mesh11()
         fn, args, shardings, meta = build_lowerable(
             "smollm-360m", "train_4k", mesh)

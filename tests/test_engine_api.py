@@ -1,0 +1,404 @@
+"""The redesigned serving API surface.
+
+Covers what the old research-script surface could not express:
+
+* ``EngineConfig`` validation — every invalid combination is a typed
+  ``EngineError`` raised before any device memory is touched;
+* streaming — ``stream()`` deltas reassemble to exactly ``generate()``'s
+  output;
+* lifecycle — ``abort()`` of waiting and running requests, with full KV
+  block reclamation in the paged backend;
+* finish reasons — stop tokens, ``min_new_tokens`` suppression, context
+  exhaustion;
+* reproducibility — per-request seeds pin a request's sampled stream
+  regardless of batch composition.
+"""
+import argparse
+
+import pytest
+
+from repro.configs import get_reduced
+from repro.serving import (Engine, EngineConfig, EngineError, FinishReason,
+                           SamplingParams)
+
+SMOLLM = get_reduced("smollm-360m")
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return Engine(EngineConfig(model=SMOLLM, policy="w4a16kv8", n_slots=3,
+                               max_seq=64, max_prompt=16))
+
+
+@pytest.fixture(scope="module")
+def paged():
+    return Engine(EngineConfig(model=SMOLLM, policy="w4a16kv8", n_slots=3,
+                               max_seq=64, max_prompt=16, cache_kind="paged",
+                               block_size=8, prefill_chunk=4))
+
+
+def _drain(eng):
+    return {o.rid: o for o in eng.run_until_idle()}
+
+
+class TestEngineConfigValidation:
+    def test_engineerror_is_valueerror(self):
+        assert issubclass(EngineError, ValueError)
+
+    @pytest.mark.parametrize("kw", [
+        dict(cache_kind="ring"),                      # unknown backend
+        dict(n_slots=0),                              # no capacity
+        dict(max_seq=-4),
+        dict(prefill_chunk=0),
+        dict(max_prompt=0),
+        dict(max_prompt=128, max_seq=64),             # prompt bound
+        dict(cache_kind="paged", max_seq=60, block_size=16),  # misaligned
+        dict(cache_kind="paged", n_blocks=0, max_seq=64, block_size=16),
+    ])
+    def test_invalid_configs_rejected(self, kw):
+        args = dict(model=SMOLLM)
+        args.update(kw)
+        with pytest.raises(EngineError):
+            EngineConfig(**args)
+
+    def test_model_must_be_modelconfig(self):
+        with pytest.raises(EngineError, match="ModelConfig"):
+            EngineConfig(model="smollm-360m")
+
+    def test_paged_family_checks(self):
+        # recurrent-state family: no KV cache to page
+        with pytest.raises(EngineError, match="no KV cache to page"):
+            EngineConfig(model=get_reduced("rwkv6-7b"), cache_kind="paged",
+                         max_seq=64, block_size=16)
+        # modality-stub family: prefill consumes extra encoder inputs
+        with pytest.raises(EngineError, match="modality-stub"):
+            EngineConfig(model=get_reduced("internvl2-2b"),
+                         cache_kind="paged", max_seq=64, block_size=16)
+
+    def test_policy_name_resolves(self):
+        cfg = EngineConfig(model=SMOLLM, policy="w8a16kv8")
+        assert cfg.policy.name == "w8a16kv8"
+        assert cfg.max_prompt == cfg.max_seq          # default bound
+
+    def test_pool_defaults_to_dense_parity(self):
+        cfg = EngineConfig(model=SMOLLM, n_slots=4, max_seq=64,
+                           cache_kind="paged", block_size=16)
+        assert cfg.pool_blocks == 4 * 64 // 16
+        tight = EngineConfig(model=SMOLLM, n_slots=4, max_seq=64,
+                             cache_kind="paged", block_size=16, n_blocks=6)
+        assert tight.pool_blocks == 6
+
+    def test_from_cli_roundtrip(self):
+        ap = argparse.ArgumentParser()
+        EngineConfig.add_cli_args(ap)
+        args = ap.parse_args(["--arch", "smollm-360m", "--policy",
+                              "w16a16kv16", "--slots", "2", "--max-seq",
+                              "64", "--cache-kind", "paged",
+                              "--block-size", "8", "--n-blocks", "9"])
+        cfg = EngineConfig.from_cli(args)
+        assert (cfg.n_slots, cfg.cache_kind, cfg.block_size) == \
+            (2, "paged", 8)
+        assert cfg.pool_blocks == 9
+        assert cfg.policy.name == "w16a16kv16"
+        assert cfg.model.name.startswith("smollm")
+
+    def test_from_cli_invalid_rejected(self):
+        ap = argparse.ArgumentParser()
+        EngineConfig.add_cli_args(ap)
+        args = ap.parse_args(["--cache-kind", "paged", "--max-seq", "60",
+                              "--block-size", "16"])
+        with pytest.raises(EngineError, match="multiple of"):
+            EngineConfig.from_cli(args)
+
+    def test_bad_policy_and_arch_are_engineerrors(self):
+        """The one-exception-type contract holds for knobs whose
+        resolution happens outside config.py (policy parser, arch
+        registry)."""
+        with pytest.raises(EngineError, match="policy"):
+            EngineConfig(model=SMOLLM, policy="w3a9kv5")
+        ap = argparse.ArgumentParser()
+        EngineConfig.add_cli_args(ap)
+        args = ap.parse_args(["--arch", "not-a-model"])
+        with pytest.raises(EngineError, match="unknown arch"):
+            EngineConfig.from_cli(args)
+
+
+class TestSubmitRejection:
+    def test_overlong_prompt_typed_error(self, dense):
+        with pytest.raises(EngineError, match="max_prompt"):
+            dense.submit(list(range(1, 40)))
+        assert not dense.scheduler.waiting            # nothing enqueued
+
+    def test_empty_prompt_rejected(self, dense):
+        with pytest.raises(EngineError, match="at least one"):
+            dense.submit([])
+
+    def test_bad_sampling_params_typed_error(self):
+        with pytest.raises(EngineError, match="min_new_tokens"):
+            SamplingParams(max_new_tokens=4, min_new_tokens=9)
+        with pytest.raises(EngineError, match="temperature"):
+            SamplingParams(temperature=-0.5)
+        with pytest.raises(EngineError, match="max_new_tokens"):
+            SamplingParams(max_new_tokens=0)
+        # str is a Sequence but must not silently become per-char ids
+        with pytest.raises(EngineError, match="stop_token_ids"):
+            SamplingParams(stop_token_ids="12")
+        with pytest.raises(EngineError, match="stop_token_ids"):
+            SamplingParams(stop_token_ids=[3, "x"])
+
+
+class TestStreaming:
+    @pytest.mark.parametrize("fixture", ["dense", "paged"])
+    def test_stream_reassembles_to_generate(self, fixture, request):
+        eng = request.getfixturevalue(fixture)
+        prompt = [5, 6, 7, 8]
+        params = SamplingParams(max_new_tokens=6)
+        [gen] = eng.generate([prompt], params)
+        deltas, cumulative = [], None
+        for out in eng.stream(prompt, params):
+            assert out.rid != gen.rid                 # a fresh request
+            deltas.extend(out.new_token_ids)
+            assert out.output_token_ids == deltas     # cumulative snapshot
+            cumulative = out
+        assert deltas == gen.output_token_ids
+        assert cumulative.finished
+        assert cumulative.finish_reason == FinishReason.LENGTH
+
+    def test_generate_batch_per_prompt_params(self, dense):
+        prompts = [[9, 9, 1], [9, 9, 1]]
+        outs = dense.generate(prompts, [SamplingParams(max_new_tokens=3),
+                                        SamplingParams(max_new_tokens=7)])
+        assert [len(o.output_token_ids) for o in outs] == [3, 7]
+        # same prompt → same greedy prefix regardless of max_new
+        assert outs[1].output_token_ids[:3] == outs[0].output_token_ids
+
+    def test_generate_params_length_mismatch(self, dense):
+        with pytest.raises(EngineError, match="SamplingParams"):
+            dense.generate([[1, 2]], [SamplingParams(), SamplingParams()])
+
+    def test_generate_all_or_nothing_on_invalid_prompt(self, dense):
+        """If any prompt in the batch is inadmissible, generate() must
+        not leave earlier prompts orphaned in the queue."""
+        with pytest.raises(EngineError, match="max_prompt"):
+            dense.generate([[1, 2, 3], list(range(40))],
+                           SamplingParams(max_new_tokens=3))
+        assert dense.scheduler.idle                   # nothing enqueued
+
+    def test_concurrent_submit_final_not_lost(self, dense):
+        """A directly-submitted request that finishes while generate()
+        drives the engine surfaces in the next run_until_idle()."""
+        rid = dense.submit([9, 1, 1], SamplingParams(max_new_tokens=2))
+        [gen] = dense.generate([[9, 2, 2]], SamplingParams(max_new_tokens=6))
+        assert len(gen.output_token_ids) == 6
+        finals = _drain(dense)
+        assert rid in finals
+        assert len(finals[rid].output_token_ids) == 2
+        assert finals[rid].finish_reason == FinishReason.LENGTH
+
+    def test_interleaved_streams_lose_nothing(self, dense):
+        """Two stream() iterators advanced alternately each drive
+        step(); outputs produced by the *other* iterator's step are
+        queued, so both streams reassemble their full token sequence."""
+        p1, p2 = [31, 2, 5], [32, 6, 1]
+        params = SamplingParams(max_new_tokens=4)
+        want1 = dense.generate([p1], params)[0].output_token_ids
+        want2 = dense.generate([p2], params)[0].output_token_ids
+        s1 = dense.stream(p1, params)
+        s2 = dense.stream(p2, params)
+        got1, got2 = [], []
+        done1 = done2 = False
+        while not (done1 and done2):
+            if not done1:
+                out = next(s1, None)
+                if out is None:
+                    done1 = True
+                else:
+                    got1.extend(out.new_token_ids)
+            if not done2:
+                out = next(s2, None)
+                if out is None:
+                    done2 = True
+                else:
+                    got2.extend(out.new_token_ids)
+        assert got1 == want1
+        assert got2 == want2
+
+    def test_run_until_idle_does_not_double_deliver_stream(self, dense):
+        """Draining the engine while a stream iterator is live must not
+        return the stream's outputs — they belong to the iterator."""
+        params = SamplingParams(max_new_tokens=4)
+        want = dense.generate([[33, 5, 2]], params)[0].output_token_ids
+        s = dense.stream([33, 5, 2], params)
+        got = [next(s).new_token_ids[0]]              # partially consumed
+        drained = dense.run_until_idle()
+        assert drained == []          # the stream's outputs stay queued
+        for out in s:                                 # resume the stream
+            got.extend(out.new_token_ids)
+        assert got == want
+
+    def test_outputs_are_snapshots(self, dense):
+        """RequestOutput token lists are copies — later engine progress
+        must not mutate an already-emitted snapshot."""
+        rid = dense.submit([4, 4, 4], SamplingParams(max_new_tokens=4))
+        first = None
+        while first is None:
+            for o in dense.step():
+                if o.rid == rid:
+                    first = o
+        frozen = list(first.output_token_ids)
+        dense.run_until_idle()
+        assert first.output_token_ids == frozen
+
+
+class TestAbort:
+    def test_abort_waiting_request(self, paged):
+        # fill all three slots, queue a fourth
+        running = [paged.submit([i + 1, 2, 3],
+                                SamplingParams(max_new_tokens=10))
+                   for i in range(3)]
+        paged.step()
+        waiting_rid = paged.submit([7, 7, 7],
+                                   SamplingParams(max_new_tokens=10))
+        assert len(paged.scheduler.waiting) == 1
+        out = paged.abort(waiting_rid)
+        assert out.finished and out.finish_reason == FinishReason.ABORT
+        assert out.output_token_ids == []
+        assert not paged.scheduler.waiting
+        finals = _drain(paged)
+        assert waiting_rid not in finals              # never ran
+        assert set(finals) == set(running)
+        # every block back in the pool
+        assert paged.allocator.free_count == paged.n_blocks
+
+    def test_abort_running_request_reclaims_blocks(self, paged):
+        rids = [paged.submit([i + 1, 5], SamplingParams(max_new_tokens=12))
+                for i in range(3)]
+        paged.step()
+        held = paged.allocator.free_count
+        out = paged.abort(rids[1])
+        assert out.finished and out.finish_reason == FinishReason.ABORT
+        assert len(out.output_token_ids) == 1         # one step ran
+        assert paged.allocator.free_count > held      # blocks came back
+        assert rids[1] not in paged._block_map
+        finals = _drain(paged)
+        assert set(finals) == {rids[0], rids[2]}
+        # allocator returns to all-free after the survivors retire
+        assert paged.allocator.free_count == paged.n_blocks
+        assert not paged._block_map
+
+    def test_abort_frees_capacity_for_waiting(self):
+        """Aborting a running request hands its blocks to the FCFS head."""
+        eng = Engine(EngineConfig(model=SMOLLM, policy="w4a16kv8",
+                                  n_slots=2, max_seq=64, max_prompt=16,
+                                  cache_kind="paged", block_size=8,
+                                  n_blocks=8, prefill_chunk=4))
+        a = eng.submit([1, 2, 3], SamplingParams(max_new_tokens=28))
+        b = eng.submit([4, 5, 6], SamplingParams(max_new_tokens=28))
+        eng.step()
+        c = eng.submit([7, 8, 9], SamplingParams(max_new_tokens=28))
+        eng.step()
+        assert {r.rid for r in eng.scheduler.running()} == {a, b}
+        eng.abort(a)
+        eng.step()                                    # admits c
+        assert {r.rid for r in eng.scheduler.running()} == {b, c}
+        finals = _drain(eng)
+        assert set(finals) == {b, c}
+        assert eng.allocator.free_count == eng.n_blocks
+
+    def test_abort_unknown_or_finished_is_none(self, dense):
+        assert dense.abort(10_000) is None
+        rid = dense.submit([2, 3], SamplingParams(max_new_tokens=2))
+        dense.run_until_idle()
+        assert dense.abort(rid) is None               # already finished
+        assert dense.abort(rid) is None               # idempotent
+
+
+class TestFinishReasons:
+    def test_stop_token_finishes(self, dense):
+        probe = dense.submit([3, 1, 4], SamplingParams(max_new_tokens=4))
+        stream = _drain(dense)[probe].output_token_ids
+        rid = dense.submit([3, 1, 4], SamplingParams(
+            max_new_tokens=8, stop_token_ids=(stream[1],)))
+        out = _drain(dense)[rid]
+        assert out.finish_reason == FinishReason.STOP
+        assert out.output_token_ids == stream[:2]     # stop token included
+
+    def test_min_new_tokens_suppresses_stop(self, dense):
+        """An eos/stop hit before min_new_tokens keeps decoding; the
+        suppressed token stays in the output and the stream continues
+        exactly as if no stop were configured."""
+        probe = dense.submit([8, 6, 4], SamplingParams(max_new_tokens=6))
+        stream = _drain(dense)[probe].output_token_ids
+        eos = stream[0]
+        rid = dense.submit([8, 6, 4], SamplingParams(
+            max_new_tokens=6, min_new_tokens=3, eos_id=eos))
+        out = _drain(dense)[rid]
+        assert len(out.output_token_ids) >= 3
+        # expected finish: first reappearance of eos at index >= 2, else
+        # the length cap — derived from the unsuppressed greedy stream
+        expect = next((i + 1 for i, t in enumerate(stream)
+                       if i >= 2 and t == eos), 6)
+        assert out.output_token_ids == stream[:expect]
+        assert out.finish_reason == (
+            FinishReason.EOS if expect < 6 else FinishReason.LENGTH)
+
+    def test_min_new_tokens_equal_max_runs_full(self, dense):
+        probe = dense.submit([2, 7, 1], SamplingParams(max_new_tokens=1))
+        eos = _drain(dense)[probe].output_token_ids[0]
+        rid = dense.submit([2, 7, 1], SamplingParams(
+            max_new_tokens=5, min_new_tokens=5, eos_id=eos))
+        out = _drain(dense)[rid]
+        assert len(out.output_token_ids) == 5
+        assert out.finish_reason == FinishReason.LENGTH
+
+    def test_context_exhaustion_reason(self, dense):
+        """A request whose budget exceeds the slot context retires with
+        finish_reason="context" when the slot fills (dense backend; the
+        paged backend rejects such requests at submit instead)."""
+        rid = dense.submit([1, 2, 3, 4], SamplingParams(max_new_tokens=90))
+        out = _drain(dense)[rid]
+        assert out.finish_reason == FinishReason.CONTEXT
+        assert len(out.output_token_ids) == 64 - 4    # pos capped at 63
+
+
+class TestSeededReproducibility:
+    PARAMS = SamplingParams(temperature=0.9, top_k=5, max_new_tokens=6,
+                            seed=42)
+
+    @pytest.mark.parametrize("fixture", ["dense", "paged"])
+    def test_same_seed_any_batch_composition(self, fixture, request):
+        eng = request.getfixturevalue(fixture)
+        solo = eng.generate([[6, 2, 8]], self.PARAMS)[0]
+        # same request inside a full, different batch
+        outs = eng.generate(
+            [[1, 2, 3, 4, 5], [6, 2, 8], [9]],
+            [SamplingParams(temperature=1.3, max_new_tokens=4, seed=7),
+             self.PARAMS,
+             SamplingParams(max_new_tokens=8)])
+        assert outs[1].output_token_ids == solo.output_token_ids
+
+    def test_dense_paged_seeded_streams_identical(self, dense, paged):
+        """Per-slot RNG streams depend on (seed, step) only, and logits
+        are backend-identical — so even *sampled* streams match across
+        backends."""
+        a = dense.generate([[3, 9, 2]], self.PARAMS)[0]
+        b = paged.generate([[3, 9, 2]], self.PARAMS)[0]
+        assert a.output_token_ids == b.output_token_ids
+
+    def test_different_seeds_diverge(self, dense):
+        outs = dense.generate(
+            [[6, 2, 8], [6, 2, 8], [6, 2, 8]],
+            [SamplingParams(temperature=0.9, max_new_tokens=8, seed=1),
+             SamplingParams(temperature=0.9, max_new_tokens=8, seed=2),
+             SamplingParams(temperature=0.9, max_new_tokens=8, seed=1)])
+        assert outs[0].output_token_ids == outs[2].output_token_ids
+        # seed 2 *may* coincide by chance on a tiny vocab, but over 8
+        # tokens of a 1024-vocab sampled stream that is vanishingly
+        # unlikely — treat equality as a real failure
+        assert outs[0].output_token_ids != outs[1].output_token_ids
+
+    def test_unseeded_submissions_draw_fresh_streams(self, dense):
+        p = SamplingParams(temperature=1.1, max_new_tokens=8)
+        a = dense.generate([[4, 4, 2]], p)[0]
+        b = dense.generate([[4, 4, 2]], p)[0]
+        assert a.output_token_ids != b.output_token_ids

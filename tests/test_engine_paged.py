@@ -12,8 +12,7 @@
 import pytest
 
 from repro.configs import get_reduced
-from repro.core.precision import get_policy
-from repro.serving import Engine, SamplingParams
+from repro.serving import Engine, EngineConfig, EngineError, SamplingParams
 
 PROMPTS = [
     [5, 6, 7],
@@ -25,57 +24,71 @@ PROMPTS = [
 
 
 def _mk_engine(kind, **kw):
-    args = dict(n_slots=3, max_seq=64, prompt_buckets=(16,), seed=0,
+    args = dict(n_slots=3, max_seq=64, max_prompt=16, seed=0,
                 cache_kind=kind, block_size=8, prefill_chunk=4)
     args.update(kw)
-    return Engine(get_reduced("smollm-360m"), policy=get_policy("w4a16kv8"),
-                  **args)
+    return Engine(EngineConfig(model=get_reduced("smollm-360m"),
+                               policy="w4a16kv8", **args))
 
 
-@pytest.fixture(scope="module")
-def engines():
-    return _mk_engine("dense"), _mk_engine("paged")
+def _drain(eng):
+    return {o.rid: o for o in eng.run_until_idle()}
 
 
 class TestPagedDenseEquivalence:
+    @pytest.fixture(scope="class")
+    def engines(self):
+        return _mk_engine("dense"), _mk_engine("paged")
+
     def test_greedy_streams_identical(self, engines):
-        dense, paged = engines
         outs = []
         for eng in engines:
-            reqs = [eng.submit(p, SamplingParams(max_new_tokens=6))
+            rids = [eng.submit(p, SamplingParams(max_new_tokens=6))
                     for p in PROMPTS]
-            eng.run_until_idle()
-            assert all(len(r.output) == 6 for r in reqs)
-            outs.append([r.output for r in reqs])
+            final = _drain(eng)
+            assert all(len(final[r].output_token_ids) == 6 for r in rids)
+            outs.append([final[r].output_token_ids for r in rids])
         assert outs[0] == outs[1], "paged engine diverged from dense"
 
     def test_equivalence_under_slot_churn(self, engines):
         """Slot reuse (blocks freed and re-allocated to new requests)
         leaves the streams identical — freed-block garbage never leaks."""
-        dense, paged = engines
         outs = []
         for eng in engines:
             batch1 = [eng.submit(p, SamplingParams(max_new_tokens=4))
                       for p in PROMPTS[:3]]
-            eng.run_until_idle()
+            f1 = _drain(eng)
             batch2 = [eng.submit(p, SamplingParams(max_new_tokens=4))
                       for p in PROMPTS[2:]]
-            eng.run_until_idle()
-            outs.append([r.output for r in batch1 + batch2])
+            f2 = _drain(eng)
+            outs.append([f1[r].output_token_ids for r in batch1]
+                        + [f2[r].output_token_ids for r in batch2])
         assert outs[0] == outs[1]
 
     def test_eos_identical(self, engines):
-        dense, paged = engines
         res = []
         for eng in engines:
             probe = eng.submit([3, 1, 4], SamplingParams(max_new_tokens=2))
-            eng.run_until_idle()
-            eos = probe.output[0]
+            eos = _drain(eng)[probe].output_token_ids[0]
             r = eng.submit([3, 1, 4], SamplingParams(max_new_tokens=8,
                                                      eos_id=eos))
-            eng.run_until_idle()
-            res.append(r.output)
+            out = _drain(eng)[r]
+            assert out.finish_reason == "eos"
+            res.append(out.output_token_ids)
         assert res[0] == res[1] and len(res[0]) == 1
+
+    def test_streaming_identical(self, engines):
+        """stream() deltas reassemble to the same tokens on both
+        backends — the streaming surface preserves the equivalence
+        guarantee, not just run_until_idle."""
+        streams = []
+        for eng in engines:
+            toks = []
+            for out in eng.stream(PROMPTS[2],
+                                  SamplingParams(max_new_tokens=6)):
+                toks.extend(out.new_token_ids)
+            streams.append(toks)
+        assert streams[0] == streams[1] and len(streams[0]) == 6
 
 
 class TestPagedStress:
@@ -86,14 +99,14 @@ class TestPagedStress:
         eng = _mk_engine("paged", n_slots=6, n_blocks=12)
         dense_equal_mem_slots = (12 * 8) // 64
         assert dense_equal_mem_slots == 1
-        reqs = [eng.submit([i + 1, 2, 3, 4, 5, 6],
+        rids = [eng.submit([i + 1, 2, 3, 4, 5, 6],
                            SamplingParams(max_new_tokens=8))
                 for i in range(6)]
         eng.step()
         assert len(eng.scheduler.running()) == 6   # all admitted at once
         assert eng.allocator.free_count == 0       # pool fully committed
-        eng.run_until_idle()
-        assert all(len(r.output) == 8 for r in reqs)
+        final = _drain(eng)
+        assert all(len(final[r].output_token_ids) == 8 for r in rids)
         # every block reclaimed on retirement
         assert eng.allocator.free_count == 12
         assert not eng._block_map
@@ -103,21 +116,21 @@ class TestPagedStress:
         scheduler holds the rest back until blocks are reclaimed, and
         the allocator is never overdrawn."""
         eng = _mk_engine("paged", n_slots=6, n_blocks=4)
-        reqs = [eng.submit([i + 1, 2, 3], SamplingParams(max_new_tokens=8))
+        rids = [eng.submit([i + 1, 2, 3], SamplingParams(max_new_tokens=8))
                 for i in range(6)]
         max_running = 0
+        finished = []
         for _ in range(500):
             if eng.scheduler.idle:
                 break
-            eng.step()
+            finished.extend(o for o in eng.step() if o.finished)
             assert eng.allocator.free_count >= 0
             max_running = max(max_running, len(eng.scheduler.running()))
         assert eng.scheduler.idle
-        assert all(len(r.output) == 8 for r in reqs)
+        assert all(len(o.output_token_ids) == 8 for o in finished)
         assert max_running == 2                    # 4 blocks / 2 per request
-        # FCFS completion: rid i admitted no later than rid i+1
-        order = sorted(range(6), key=lambda i: reqs[i].finish_time)
-        assert order == list(range(6))
+        # FCFS completion: rid i finishes no later than rid i+1
+        assert [o.rid for o in finished] == rids
         assert eng.allocator.free_count == 4
 
     def test_paged_resident_memory_smaller(self):
@@ -127,13 +140,13 @@ class TestPagedStress:
 
     def test_infeasible_request_rejected_at_submit(self):
         """A request whose worst case exceeds the whole pool could never
-        pass the admission gate; it is rejected at submit (fail fast)
-        instead of deadlocking the FCFS queue behind it."""
+        pass the admission gate; it is rejected at submit (fail fast,
+        typed) instead of deadlocking the FCFS queue behind it."""
         eng = _mk_engine("paged", n_slots=2, n_blocks=2)
-        with pytest.raises(ValueError, match="KV blocks"):
+        with pytest.raises(EngineError, match="KV blocks"):
             eng.submit([1, 2, 3], SamplingParams(max_new_tokens=32))
         assert not eng.scheduler.waiting
         # a feasible request still sails through afterwards
         ok = eng.submit([1, 2, 3], SamplingParams(max_new_tokens=4))
-        eng.run_until_idle()
-        assert len(ok.output) == 4
+        out = _drain(eng)[ok]
+        assert len(out.output_token_ids) == 4

@@ -2,7 +2,6 @@
 REDUCED variant runs one forward and one train step on CPU with correct
 output shapes and no NaNs; serving prefill+decode run under the paper's
 mixed-precision policy."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,6 @@
 """Serving engine: continuous batching, scheduler invariants, sampling,
-quantize_params, eos handling."""
+quantize_params, eos handling — through the streaming API (submit →
+step() → RequestOutput)."""
 import random
 
 import jax
@@ -10,72 +11,100 @@ import pytest
 from repro.configs import get_reduced
 from repro.core.packing import PackedWeight
 from repro.core.precision import get_policy
-from repro.serving import Engine, SamplingParams, Scheduler, quantize_params
-from repro.serving.request import Request, Status
-from repro.serving.sampler import sample
+from repro.serving import (Engine, EngineConfig, SamplingParams, Scheduler,
+                           quantize_params)
+from repro.serving.request import Request
+from repro.serving.sampler import sample, slot_keys
 
 
 @pytest.fixture(scope="module")
 def engine():
-    return Engine(get_reduced("smollm-360m"), n_slots=3, max_seq=64,
-                  prompt_buckets=(16,))
+    return Engine(EngineConfig(model=get_reduced("smollm-360m"), n_slots=3,
+                               max_seq=64, max_prompt=16))
+
+
+def _drain(engine):
+    """Run until idle; return {rid: final RequestOutput}."""
+    return {o.rid: o for o in engine.run_until_idle()}
 
 
 class TestEngine:
     def test_continuous_batching_drains(self, engine):
-        reqs = [engine.submit([1 + i, 2, 3],
+        rids = [engine.submit([1 + i, 2, 3],
                               SamplingParams(max_new_tokens=5))
                 for i in range(7)]
-        engine.run_until_idle()
-        assert all(r.done and len(r.output) == 5 for r in reqs)
-        assert all(r.ttft is not None and r.latency >= r.ttft for r in reqs)
+        outs = _drain(engine)
+        assert set(outs) == set(rids)
+        assert all(outs[r].finished and
+                   len(outs[r].output_token_ids) == 5 for r in rids)
+        assert all(outs[r].finish_reason == "length" for r in rids)
+        assert all(outs[r].ttft is not None and
+                   outs[r].latency >= outs[r].ttft for r in rids)
 
     def test_greedy_deterministic(self, engine):
         a = engine.submit([5, 6, 7], SamplingParams(max_new_tokens=6))
-        engine.run_until_idle()
+        oa = _drain(engine)[a]
         b = engine.submit([5, 6, 7], SamplingParams(max_new_tokens=6))
-        engine.run_until_idle()
-        assert a.output == b.output
+        ob = _drain(engine)[b]
+        assert oa.output_token_ids == ob.output_token_ids
 
     def test_prompt_isolation(self, engine):
         """Concurrent slots don't leak: same prompt gives same greedy
         output regardless of what else is in the batch."""
         solo = engine.submit([9, 8, 7], SamplingParams(max_new_tokens=4))
-        engine.run_until_idle()
+        solo_out = _drain(engine)[solo]
         mixed = [engine.submit([9, 8, 7], SamplingParams(max_new_tokens=4)),
                  engine.submit([1, 2, 3, 4, 5],
                                SamplingParams(max_new_tokens=4)),
                  engine.submit([42], SamplingParams(max_new_tokens=4))]
-        engine.run_until_idle()
-        assert mixed[0].output == solo.output
+        outs = _drain(engine)
+        assert outs[mixed[0]].output_token_ids == solo_out.output_token_ids
 
     def test_eos_stops_early(self, engine):
         # find the first greedy token, then use it as eos
         probe = engine.submit([3, 1, 4], SamplingParams(max_new_tokens=3))
-        engine.run_until_idle()
-        eos = probe.output[0]
+        eos = _drain(engine)[probe].output_token_ids[0]
         r = engine.submit([3, 1, 4], SamplingParams(max_new_tokens=8,
                                                     eos_id=eos))
-        engine.run_until_idle()
-        assert r.output == [eos]
+        out = _drain(engine)[r]
+        assert out.output_token_ids == [eos]
+        assert out.finish_reason == "eos"
 
     def test_ragged_prompts_no_leak(self, engine):
         """Ragged (unpadded, chunked) prefill is deterministic per prompt
         regardless of what previously occupied the slot."""
         short = engine.submit([11, 12], SamplingParams(max_new_tokens=4))
-        engine.run_until_idle()
+        o1 = _drain(engine)[short]
         again = engine.submit([11, 12], SamplingParams(max_new_tokens=4))
-        engine.run_until_idle()
-        assert short.output == again.output
+        o2 = _drain(engine)[again]
+        assert o1.output_token_ids == o2.output_token_ids
 
     def test_single_token_prompt(self, engine):
         """n == 1 skips prefill entirely (nothing to write before the
         first decode); stale slot state must not leak into the output."""
         a = engine.submit([13], SamplingParams(max_new_tokens=4))
-        engine.run_until_idle()
+        oa = _drain(engine)[a]
         b = engine.submit([13], SamplingParams(max_new_tokens=4))
-        engine.run_until_idle()
-        assert a.output == b.output and len(a.output) == 4
+        ob = _drain(engine)[b]
+        assert oa.output_token_ids == ob.output_token_ids
+        assert len(oa.output_token_ids) == 4
+
+    def test_step_streams_every_running_request(self, engine):
+        """Each step() emits exactly one single-token delta per running
+        request, and the deltas concatenate to the final output."""
+        rids = [engine.submit([21 + i, 5], SamplingParams(max_new_tokens=3))
+                for i in range(2)]
+        seen = {r: [] for r in rids}
+        finals = {}
+        while not engine.scheduler.idle:
+            outs = engine.step()
+            assert all(len(o.new_token_ids) == 1 for o in outs)
+            for o in outs:
+                seen[o.rid].extend(o.new_token_ids)
+                if o.finished:
+                    finals[o.rid] = o
+        for r in rids:
+            assert seen[r] == finals[r].output_token_ids
 
 
 class TestQuantizeParams:
@@ -100,30 +129,97 @@ class TestQuantizeParams:
             q, is_leaf=lambda x: isinstance(x, PackedWeight)))
 
 
+def _keys(key, B):
+    return jax.random.split(key, B)
+
+
 class TestSampler:
     def test_greedy(self, key):
         logits = jnp.array([[0.1, 3.0, 0.2], [5.0, 0.0, 0.0]])
-        out = sample(key, logits, jnp.zeros(2), jnp.zeros(2, jnp.int32))
+        out = sample(_keys(key, 2), logits, jnp.zeros(2),
+                     jnp.zeros(2, jnp.int32))
         assert out.tolist() == [1, 0]
 
     def test_topk_restricts(self, key):
-        logits = jnp.array([[10.0, 9.0, -50.0, -50.0]] * 64)
-        ks = jax.random.split(key, 64)
-        outs = [int(sample(k, logits[:1], jnp.ones(1),
-                           jnp.full(1, 2, jnp.int32))[0]) for k in ks[:16]]
+        logits = jnp.array([[10.0, 9.0, -50.0, -50.0]])
+        outs = [int(sample(_keys(jax.random.fold_in(key, i), 1), logits,
+                           jnp.ones(1), jnp.full(1, 2, jnp.int32))[0])
+                for i in range(16)]
         assert set(outs) <= {0, 1}
 
     def test_temperature_spreads(self, key):
         logits = jnp.zeros((1, 8))
-        outs = {int(sample(jax.random.fold_in(key, i), logits,
+        outs = {int(sample(_keys(jax.random.fold_in(key, i), 1), logits,
                            jnp.ones(1), jnp.zeros(1, jnp.int32))[0])
                 for i in range(32)}
         assert len(outs) > 2
 
+    # -- edge cases -----------------------------------------------------
+
+    def test_topk_geq_vocab_keeps_full_distribution(self, key):
+        """top_k >= V must behave exactly like top_k == 0 (no mask)."""
+        logits = jax.random.normal(key, (4, 8))
+        for i in range(8):
+            ks = _keys(jax.random.fold_in(key, i), 4)
+            full = sample(ks, logits, jnp.ones(4), jnp.zeros(4, jnp.int32))
+            big = sample(ks, logits, jnp.ones(4),
+                         jnp.full(4, 100, jnp.int32))
+            exact = sample(ks, logits, jnp.ones(4),
+                           jnp.full(4, 8, jnp.int32))
+            assert full.tolist() == big.tolist() == exact.tolist()
+
+    def test_tied_logits_at_threshold_all_kept(self, key):
+        """With k=2 and three tokens tied at the k-th threshold, the mask
+        keeps the whole tie (logits >= threshold), so every tied token is
+        reachable."""
+        logits = jnp.array([[5.0, 1.0, 1.0, 1.0, -9.0]])
+        outs = {int(sample(_keys(jax.random.fold_in(key, i), 1), logits,
+                           jnp.full(1, 3.0), jnp.full(1, 2, jnp.int32))[0])
+                for i in range(200)}
+        assert outs <= {0, 1, 2, 3}          # -9.0 never sampled
+        assert {1, 2, 3} & outs              # the tie is reachable
+
+    def test_temperature_to_zero_matches_greedy(self, key):
+        """temperature → 0⁺ concentrates the softmax onto the argmax: the
+        sampled token must agree with the temperature==0 greedy branch."""
+        logits = jax.random.normal(key, (4, 16)) * 3.0
+        greedy = sample(_keys(key, 4), logits, jnp.zeros(4),
+                        jnp.zeros(4, jnp.int32))
+        for i in range(8):
+            ks = _keys(jax.random.fold_in(key, i), 4)
+            tiny = sample(ks, logits, jnp.full(4, 1e-5),
+                          jnp.zeros(4, jnp.int32))
+            assert tiny.tolist() == greedy.tolist()
+
+    def test_heterogeneous_params_per_slot(self, key):
+        """One batch mixes greedy, top-k-restricted, and unrestricted
+        rows; each row obeys its own params."""
+        logits = jnp.array([[0.0, 9.0, 0.0, 0.0],      # greedy row
+                            [10.0, 9.5, -50.0, -50.0],  # top-2 row
+                            [0.0, 0.0, 0.0, 0.0]])      # uniform row
+        temp = jnp.array([0.0, 1.0, 1.0])
+        top_k = jnp.array([0, 2, 0], jnp.int32)
+        seen2 = set()
+        for i in range(64):
+            out = sample(_keys(jax.random.fold_in(key, i), 3), logits,
+                         temp, top_k)
+            assert int(out[0]) == 1              # greedy row pinned
+            assert int(out[1]) in (0, 1)         # top-2 row restricted
+            seen2.add(int(out[2]))
+        assert len(seen2) > 2                    # uniform row spreads
+
+    def test_slot_keys_deterministic_per_seed_step(self):
+        """slot_keys depends only on (seed, step) — identical pairs give
+        identical keys at any batch position."""
+        seeds = jnp.array([7, 9, 7], jnp.uint32)
+        steps = jnp.array([3, 3, 3], jnp.int32)
+        a, b, c = np.asarray(slot_keys(seeds, steps))
+        assert (a == c).all() and not (a == b).all()
+
 
 class TestScheduler:
     def test_fcfs_admission(self):
-        s = Scheduler(n_slots=2, max_prompt_len=8)
+        s = Scheduler(n_slots=2)
         rs = [Request(rid=i, prompt=[1]) for i in range(4)]
         for r in rs:
             s.add(r)
@@ -133,24 +229,30 @@ class TestScheduler:
         assert [r.rid for r in s.admit()] == [2]
 
     def test_slot_exclusivity(self):
-        s = Scheduler(n_slots=3, max_prompt_len=8)
+        s = Scheduler(n_slots=3)
         for i in range(6):
             s.add(Request(rid=i, prompt=[1]))
         s.admit()
         slots = [r.slot for r in s.running()]
         assert sorted(slots) == [0, 1, 2]
 
-    def test_prompt_length_guard(self):
-        s = Scheduler(n_slots=1, max_prompt_len=4)
-        with pytest.raises(AssertionError):
-            s.add(Request(rid=0, prompt=[1] * 9))
+    def test_remove_waiting(self):
+        s = Scheduler(n_slots=1)
+        rs = [Request(rid=i, prompt=[1]) for i in range(3)]
+        for r in rs:
+            s.add(r)
+        s.admit()                                 # rid 0 running
+        assert s.remove_waiting(rs[1])
+        assert not s.remove_waiting(rs[0])        # running, not waiting
+        s.finish(rs[0], 0.0)
+        assert [r.rid for r in s.admit()] == [2]  # rid 1 skipped
 
 
 @pytest.mark.parametrize("seed", range(20))
 def test_prop_scheduler_never_double_books(seed):
     """Random admit/finish interleavings keep slots exclusive."""
     rng = random.Random(seed)
-    s = Scheduler(n_slots=3, max_prompt_len=8)
+    s = Scheduler(n_slots=3)
     rid = 0
     for _ in range(rng.randint(1, 12)):
         for _ in range(rng.randint(1, 6)):
@@ -181,7 +283,7 @@ def test_prop_scheduler_gate_is_fcfs(seed):
         budget["free"] -= need[req.rid]       # reserve on admission
         return True
 
-    s = Scheduler(n_slots=3, max_prompt_len=8, admit_gate=gate)
+    s = Scheduler(n_slots=3, admit_gate=gate)
     for rid in range(6):
         need[rid] = rng.randint(1, 3)
         s.add(Request(rid=rid, prompt=[1]))

@@ -5,11 +5,15 @@
 #   make lint        ruff gate (rule set in ruff.toml; used by CI)
 #   make bench       all benchmark tables
 #   make bench-paged paged-vs-dense KV cache benchmark only
+#   make bench-smoke CI-sized paged-attention microbench; writes
+#                    BENCH_paged_attn_smoke.json (the committed full-run
+#                    BENCH_paged_attn.json is untouched) and cross-checks
+#                    the kernel
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench bench-paged
+.PHONY: test test-fast lint bench bench-paged bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -26,3 +30,6 @@ bench:
 
 bench-paged:
 	$(PY) -m benchmarks.run --only paged
+
+bench-smoke:
+	$(PY) -m benchmarks.kernel_attention --smoke

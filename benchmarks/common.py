@@ -37,8 +37,12 @@ class Reporter:
         self.table = table
         self.rows: List[Dict] = []
 
-    def add(self, name: str, seconds: float, **derived):
-        self.rows.append({"name": name, "us_per_call": seconds * 1e6,
+    def add(self, name: str, seconds, **derived):
+        """``seconds=None`` marks a modeled-only row: no measured wall
+        clock (us_per_call is null/empty), only derived columns."""
+        self.rows.append({"name": name,
+                          "us_per_call": None if seconds is None
+                          else seconds * 1e6,
                           **derived})
 
     def print_csv(self):
@@ -51,8 +55,23 @@ class Reporter:
         for r in self.rows:
             print(",".join(_fmt(r.get(k, "")) for k in keys))
 
+    def write_json(self, path: str) -> str:
+        """Machine-readable dump (the BENCH_*.json trajectory artifacts):
+        one object per row plus the host backend, so successive PRs can
+        diff the same benchmark across commits."""
+        import json
+        payload = {"table": self.table,
+                   "backend": jax.default_backend(),
+                   "rows": self.rows}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
 
 def _fmt(v):
+    if v is None:
+        return ""
     if isinstance(v, float):
         return f"{v:.3f}" if abs(v) < 1e4 else f"{v:.4e}"
     return str(v)

@@ -14,6 +14,13 @@ The paged rows include a pool sized for *live* context (``n_blocks`` ≪
 dense capacity) — the configuration a dense slab of equal memory could
 not serve at all (it would hold ``pool_tokens / max_seq`` slots).
 
+Both backends decode through the Pallas flash-decode kernels (paged:
+in-kernel block-table indirection, grid bounded by live context —
+kernels/paged_kvattn.py; the per-step traffic comparison against the
+old gather+kernel path lives in ``BENCH_paged_attn.json``, see
+``benchmarks.kernel_attention.run_paged``).  CPU wall clocks therefore
+time the Pallas *interpreter* and are comparable only within a row set.
+
     PYTHONPATH=src python -m benchmarks.paged_vs_dense
 """
 from __future__ import annotations

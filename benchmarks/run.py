@@ -19,6 +19,8 @@ TABLES = {
     "fig20": ("benchmarks.ablations", "Fig. 20 internal baselines"),
     "paged": ("benchmarks.paged_vs_dense",
               "Paged vs dense KV memory + throughput"),
+    "paged_attn": ("benchmarks.kernel_attention:run_paged",
+                   "In-kernel paged attention vs gather+kernel"),
 }
 
 
@@ -36,8 +38,9 @@ def main(argv=None) -> int:
         print(f"\n===== {k}: {desc} =====", flush=True)
         t0 = time.perf_counter()
         try:
+            mod_name, _, fn = mod_name.partition(":")
             mod = importlib.import_module(mod_name)
-            mod.run().print_csv()
+            getattr(mod, fn or "run")().print_csv()
             print(f"[{k} done in {time.perf_counter() - t0:.1f}s]",
                   flush=True)
         except Exception:     # noqa: BLE001

@@ -266,6 +266,7 @@ def decode_attention(
     pos: jax.Array,            # scalar: index of the first new token
     window: Optional[int] = None,
     impl: str = "fused",
+    block_s: Optional[int] = None,   # pallas impl: KV tile height
 ) -> jax.Array:
     """Attend T new queries against `pos + t` cached tokens (causal)."""
     B, T, H, D = q.shape
@@ -275,7 +276,8 @@ def decode_attention(
 
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.kvattn_decode(q, cache, spec, pos, window=window)
+        return kops.kvattn_decode(q, cache, spec, pos, window=window,
+                                  block_s=block_s or 256)
 
     if impl == "dequant_first":
         # Baseline: materialize the whole cache in bf16 (what §4.2 says

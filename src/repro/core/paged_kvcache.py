@@ -209,6 +209,27 @@ def append_paged(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
     )
 
 
+def live_ctx(cache: PagedKVCache,
+             max_live: Optional[int] = None) -> int:
+    """Live-context high-water mark in tokens, rounded up to whole blocks
+    and clipped to ``max_context`` — the tight ``n_ctx`` for
+    :func:`gather_view` fallbacks.
+
+    ``max_live`` (the engine's host-tracked ``max(position) + 1`` over
+    running slots) wins when given.  Otherwise the advisory ``length``
+    counter is used when it is concrete — an *over*-estimate is safe (it
+    only widens the gather), and ``length`` ≥ every true frontier by
+    construction.  Under a jit trace with no ``max_live`` the bound is
+    unknowable at trace time, so the full ``max_context`` is kept.
+    """
+    bs = cache.block_size
+    if max_live is None:
+        if isinstance(cache.length, jax.core.Tracer):
+            return cache.max_context
+        max_live = int(jnp.max(cache.length)) if cache.length.size else 0
+    return min(blocks_needed(max_live, bs) * bs, cache.max_context)
+
+
 def gather_view(cache: PagedKVCache,
                 n_ctx: Optional[int] = None) -> KV.KVCache:
     """Materialize a dense ``(n_slots, n_ctx, H, Dstore)`` view of every

@@ -20,6 +20,20 @@ and the KV memory loading pipeline (§4.4), TPU-native:
 VMEM per step at block_s=256, D=128, rep≤16: k/v tiles 2·256·128 B int8 +
 q 16·128·2 B + scratch (16·128·4 + 2·16·4) ≈ 90 KiB — double-buffered
 comfortably within VMEM.
+
+The per-block online-softmax update (:func:`flash_block_update`) is shared
+with the *paged* decode kernel (kernels/paged_kvattn.py), which walks pool
+blocks through a scalar-prefetched block table instead of a dense slab.
+Because both kernels run the identical update over bit-identical KV tiles,
+a paged cache and a dense cache of the same logical contents produce
+bit-identical attention outputs when traversed at the same block
+granularity — the serving engine's dense/paged equivalence guarantee.
+
+``window`` is carried as a traced int32 operand (not a static Python
+value) so per-layer sliding windows — gemma3's local/global mix arrives
+as a traced scalar from inside the layer scan — need no retrace;
+``NO_WINDOW`` (2^30) is the "global attention" sentinel, and the single
+source models/transformer.BIG_WINDOW re-exports.
 """
 from __future__ import annotations
 
@@ -31,6 +45,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+#: "no sliding window" sentinel — any int32 ``pos - NO_WINDOW`` stays
+#: negative for every reachable position, so the window mask is a no-op.
+NO_WINDOW = 1 << 30
 
 
 def _dequant_tile(q_ints: jax.Array, scale: jax.Array, packed: bool,
@@ -43,21 +60,18 @@ def _dequant_tile(q_ints: jax.Array, scale: jax.Array, packed: bool,
     return (q_ints.astype(jnp.float32) * scale[:, None]).astype(jnp.bfloat16)
 
 
-def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, block_s, n_s, d, packed,
-                   window, kv_is_float):
-    s_blk = pl.program_id(2)
+def flash_block_update(q, kt, ks, vt, vs, pos, window, base,
+                       m_ref, l_ref, acc_ref, *, d, packed, kv_is_float):
+    """One flash-decoding step over a (bs, Dstore) KV tile.
 
-    @pl.when(s_blk == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    pos = pos_ref[0, 0]                # this slot's newest-token position
-    q = q_ref[0, 0]                                     # (rep, D) bf16
-    kt = k_ref[0, :, 0]                                 # (bs, Dstore)
-    ks = ks_ref[0, :, 0]                                # (bs,)
+    ``base`` is the *logical* position of the tile's first token — the
+    only place the dense and paged kernels differ (dense: ``s_blk *
+    block_s`` over the slab; paged: ``logical_block * block_size``, while
+    the tile itself was DMA'd from wherever the block table pointed).
+    Updates the online-softmax scratch (m, l, acc) in place.  A fully
+    masked tile is an exact no-op (alpha = e^0 = 1, p = 0), which is what
+    lets a shorter grid (live context) match a longer one bitwise.
+    """
     if kv_is_float:
         kd = (kt.astype(jnp.float32) * ks[:, None]).astype(jnp.bfloat16)
     else:
@@ -67,10 +81,8 @@ def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
                             preferred_element_type=jnp.float32)
     s *= jax.lax.rsqrt(jnp.float32(d))                  # (rep, bs)
 
-    idx = s_blk * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = idx <= pos
-    if window is not None:
-        mask &= idx > (pos - window)
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (idx <= pos) & (idx > (pos - window))
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]                                 # (rep, 1)
@@ -81,8 +93,6 @@ def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
     m_ref[...] = m_new
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
 
-    vt = v_ref[0, :, 0]
-    vs = vs_ref[0, :, 0]
     if kv_is_float:
         vd = (vt.astype(jnp.float32) * vs[:, None]).astype(jnp.bfloat16)
     else:
@@ -91,16 +101,39 @@ def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
         p.astype(jnp.bfloat16), vd, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
+
+def flash_store(o_ref, m_ref, l_ref, acc_ref):
+    """Final normalized store of the online-softmax accumulator."""
+    l = jnp.maximum(l_ref[...], 1e-20)
+    o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, win_ref,
+                   o_ref, m_ref, l_ref, acc_ref, *, block_s, n_s, d, packed,
+                   kv_is_float):
+    s_blk = pl.program_id(2)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0, 0]                # this slot's newest-token position
+    win = win_ref[0, 0]
+    flash_block_update(
+        q_ref[0, 0], k_ref[0, :, 0], ks_ref[0, :, 0], v_ref[0, :, 0],
+        vs_ref[0, :, 0], pos, win, s_blk * block_s, m_ref, l_ref, acc_ref,
+        d=d, packed=packed, kv_is_float=kv_is_float)
+
     @pl.when(s_blk == n_s - 1)
     def _store():
-        l = jnp.maximum(l_ref[...], 1e-20)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        flash_store(o_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("packed", "kv_is_float", "block_s", "window",
-                     "interpret"))
+    static_argnames=("packed", "kv_is_float", "block_s", "interpret"))
 def kvattn_decode_grouped(
     q: jax.Array,          # (B, Hkv, rep, D) bf16 — adaptive head alignment
     k: jax.Array,          # (B, S, Hkv, Dstore) int8 / fp8 / bf16
@@ -108,11 +141,11 @@ def kvattn_decode_grouped(
     v: jax.Array,
     v_scale: jax.Array,
     pos: jax.Array,        # (B, 1) int32: per-slot newest-token index
+    window: jax.Array,     # (1, 1) int32: sliding window (NO_WINDOW = off)
     *,
     packed: bool,
     kv_is_float: bool = False,
     block_s: int = 256,
-    window=None,
     interpret: bool = False,
 ) -> jax.Array:
     B, Hkv, rep, D = q.shape
@@ -125,7 +158,7 @@ def kvattn_decode_grouped(
     grid = (B, Hkv, n_s)
     kernel = functools.partial(
         _kvattn_kernel, block_s=bs, n_s=n_s, d=D, packed=packed,
-        window=window, kv_is_float=kv_is_float)
+        kv_is_float=kv_is_float)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -137,6 +170,8 @@ def kvattn_decode_grouped(
             pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
             pl.BlockSpec((1, 1), lambda b, h, s: (b, 0),
                          memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0),
+                         memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((1, 1, rep, D), lambda b, h, s: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
@@ -146,12 +181,10 @@ def kvattn_decode_grouped(
             pltpu.VMEM((rep, D), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, k_scale, v, v_scale, pos)
+    )(q, k, k_scale, v, v_scale, pos, window)
 
 
-# Paged decode: each slot's block table is gathered into the dense
-# (B, S, Hkv, Dstore) layout this kernel's KV loading pipeline walks
-# (core/paged_kvcache.gather_view — single source of the sentinel/clip
-# indexing), then kvattn_decode_grouped runs unchanged; see
-# ops.kvattn_decode_paged.  A future Pallas paged kernel can replace the
-# gather with in-kernel block-table indirection (ROADMAP open items).
+# Paged decode lives in kernels/paged_kvattn.py: the block-table
+# indirection happens *inside* that kernel (scalar-prefetched tables drive
+# each grid step's BlockSpec index_map straight into the block pool), so no
+# dense gather ever materializes — see ops.kvattn_decode_paged.

@@ -13,11 +13,12 @@ import jax.numpy as jnp
 
 from repro.core.kvcache import KVCache
 from repro.core.packing import PackedWeight
-from repro.core.paged_kvcache import PagedKVCache, gather_view
+from repro.core.paged_kvcache import PagedKVCache, blocks_needed
 from repro.core.precision import FormatSpec, PrecisionPolicy
 
 from . import kvattn as _kvattn
 from . import mpgemm as _mpgemm
+from . import paged_kvattn as _pkvattn
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -84,39 +85,68 @@ def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.transpose(0, 2, 1, 3)[:, :S].astype(q.dtype)
 
 
+def _norm_pos(pos, B: int) -> jax.Array:
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    if pos_arr.ndim == 0:
+        pos_arr = jnp.broadcast_to(pos_arr, (B,))
+    return pos_arr
+
+
+def _norm_window(window) -> jax.Array:
+    """None / int / traced scalar → (1,) int32 operand for the kernels
+    (``kvattn.NO_WINDOW`` disables the sliding-window mask exactly)."""
+    if window is None:
+        window = _kvattn.NO_WINDOW
+    return jnp.asarray(window, jnp.int32).reshape(1)
+
+
 def kvattn_decode(q: jax.Array, cache: KVCache, spec: FormatSpec,
-                  pos, window: Optional[int] = None,
-                  block_s: int = 256) -> jax.Array:
+                  pos, window=None, block_s: int = 256) -> jax.Array:
     """Decode attention for one new token.  q: (B, 1, H, D); ``pos`` is a
     scalar or a per-slot (B,) vector of newest-token positions (the
-    continuous-batching engine's ragged slots)."""
+    continuous-batching engine's ragged slots).  ``window`` may be None,
+    an int, or a traced int32 scalar (per-layer local/global mixes)."""
     B, T, H, D = q.shape
     assert T == 1, "pallas decode kernel is single-token (use prefill path)"
     Hkv = cache.k.shape[2]
     rep = H // Hkv
     qg = q.reshape(B, Hkv, rep, D)          # adaptive head alignment (§4.2)
-    pos_arr = jnp.asarray(pos, jnp.int32)
-    if pos_arr.ndim == 0:
-        pos_arr = jnp.broadcast_to(pos_arr, (B,))
-    pos_arr = pos_arr.reshape(B, 1)
     out = _kvattn.kvattn_decode_grouped(
         qg.astype(jnp.bfloat16),
         cache.k, cache.k_scale[..., 0], cache.v, cache.v_scale[..., 0],
-        pos_arr, packed=spec.packed, kv_is_float=spec.is_float,
-        block_s=block_s, window=window, interpret=INTERPRET)
+        _norm_pos(pos, B).reshape(B, 1), _norm_window(window).reshape(1, 1),
+        packed=spec.packed, kv_is_float=spec.is_float,
+        block_s=block_s, interpret=INTERPRET)
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
 def kvattn_decode_paged(q: jax.Array, cache: PagedKVCache, spec: FormatSpec,
-                        pos, window: Optional[int] = None,
-                        block_s: int = 256) -> jax.Array:
-    """Paged decode attention: block-table gather + the fused kernel.
+                        pos, window=None,
+                        max_live: Optional[int] = None) -> jax.Array:
+    """Paged decode attention with **in-kernel** block-table indirection.
 
     q: (B, 1, H, D); ``cache`` is a per-layer (unstacked) PagedKVCache
-    whose block table maps each of the B slots' logical contexts.  The
-    gather (one XLA dynamic-gather per operand, HBM→HBM) materializes the
-    dense per-slot view the kernel's KV loading pipeline walks; unmapped
-    table entries clamp to arbitrary finite pool data, which the kernel's
-    ``kpos <= pos`` mask zeroes exactly."""
-    return kvattn_decode(q, gather_view(cache), spec, pos, window=window,
-                         block_s=block_s)
+    whose block table maps each of the B slots' logical contexts.  No
+    dense view is ever materialized: the kernel scalar-prefetches the
+    table and DMAs K/V/scale tiles block-by-block straight out of the
+    pool (kernels/paged_kvattn.py).  ``max_live`` (static, tokens) bounds
+    the grid's block axis at the batch's live-context high-water mark —
+    rounded up to whole blocks — so per-step traffic scales with live
+    context, not ``max_context``.  Unmapped (sentinel) table entries are
+    clamped to a real pool block and zeroed exactly by the kernel's
+    ``kpos <= pos`` mask."""
+    B, T, H, D = q.shape
+    assert T == 1, "pallas decode kernel is single-token (use prefill path)"
+    Hkv = cache.k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, D)          # adaptive head alignment (§4.2)
+    n_live = None
+    if max_live is not None:
+        n_live = blocks_needed(max_live, cache.block_size)
+    out = _pkvattn.paged_kvattn_decode_grouped(
+        qg.astype(jnp.bfloat16),
+        cache.k, cache.k_scale[..., 0], cache.v, cache.v_scale[..., 0],
+        cache.block_table, _norm_pos(pos, B), _norm_window(window),
+        packed=spec.packed, kv_is_float=spec.is_float,
+        n_live_blocks=n_live, interpret=INTERPRET)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: paged decode attention — flash-decoding straight
+over the block pool, block-table indirection *inside* the kernel.
+
+This is the paper's KV memory loading pipeline (§4.4) applied to paged
+storage: instead of first materializing a dense ``(B, max_context, Hkv,
+Dstore)`` per-slot view with an HBM→HBM gather (the pre-kernel fallback —
+transient traffic proportional to worst-case context), the per-slot block
+tables are **scalar-prefetched** (``pltpu.PrefetchScalarGridSpec``) so
+each grid step's ``BlockSpec`` index_map resolves ``(slot, logical_block)
+→ pool_block`` and DMAs the K/V/scale tiles of exactly that pool block
+HBM→VMEM.  ``pallas_call`` still pipelines the *next* block's DMA under
+the current block's dequant (VPU) + QKᵀ/PV (MXU) — the Fig. 10 triple
+overlap — because the prefetched table makes every upcoming block address
+known ahead of the compute.
+
+Traffic per decode step is therefore proportional to **live** context
+(the grid's block axis is ``n_live_blocks = ceil(max_live / block_size)``
+when the caller knows the batch's high-water mark, ``blocks_per_slot``
+otherwise), and there is no transient dense copy at all.
+
+Ragged slots and sentinel table entries: a slot whose context ends before
+the grid does (or whose trailing table entries are unmapped sentinels,
+clamped to a real pool block by the wrapper) is handled by the logical
+``kpos <= pos`` mask — a fully masked block is an *exact* no-op of the
+online-softmax state (see kvattn.flash_block_update), so garbage blocks
+contribute nothing, bitwise.
+
+Per-block compute is :func:`kvattn.flash_block_update`, shared with the
+dense decode kernel — the two kernels are bit-identical over equal logical
+contents at equal block granularity, which is what keeps the serving
+engine's dense and paged backends byte-identical under greedy decoding.
+
+VMEM per step at block_size=64, D=128, rep≤16: k/v tiles 2·64·128 B int8
++ q 16·128·2 B + scratch (16·128·4 + 2·16·4) ≈ 29 KiB — small blocks
+double-buffer trivially; the table and positions live in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .kvattn import NEG_INF, flash_block_update, flash_store
+
+
+def _paged_kvattn_kernel(tbl_ref, pos_ref, win_ref,
+                         q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *,
+                         block_size, n_s, d, packed, kv_is_float):
+    b = pl.program_id(0)
+    s_blk = pl.program_id(2)   # logical block index within the slot
+
+    @pl.when(s_blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]                   # this slot's newest-token position
+    win = win_ref[0]
+    # the K/V tiles were DMA'd from pool block tbl[b, s_blk]; their
+    # *logical* positions start at s_blk * block_size
+    flash_block_update(
+        q_ref[0, 0], k_ref[0, :, 0], ks_ref[0, :, 0], v_ref[0, :, 0],
+        vs_ref[0, :, 0], pos, win, s_blk * block_size,
+        m_ref, l_ref, acc_ref, d=d, packed=packed, kv_is_float=kv_is_float)
+
+    @pl.when(s_blk == n_s - 1)
+    def _store():
+        flash_store(o_ref, m_ref, l_ref, acc_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("packed", "kv_is_float", "n_live_blocks", "interpret"))
+def paged_kvattn_decode_grouped(
+    q: jax.Array,            # (B, Hkv, rep, D) bf16 — adaptive head alignment
+    k: jax.Array,            # (n_blocks, block_size, Hkv, Dstore) pool
+    k_scale: jax.Array,      # (n_blocks, block_size, Hkv) f32
+    v: jax.Array,
+    v_scale: jax.Array,
+    block_table: jax.Array,  # (B, blocks_per_slot) int32; n_blocks=unmapped
+    pos: jax.Array,          # (B,) int32: per-slot newest-token index
+    window: jax.Array,       # (1,) int32 window (kvattn.NO_WINDOW = off)
+    *,
+    packed: bool,
+    kv_is_float: bool = False,
+    n_live_blocks=None,      # static: grid extent ≤ blocks_per_slot
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, rep, D = q.shape
+    nb, bs = k.shape[0], k.shape[1]
+    Ds = k.shape[3]
+    nbp = block_table.shape[1]
+    n_s = nbp if n_live_blocks is None else max(1, min(n_live_blocks, nbp))
+
+    # Sentinel entries (>= n_blocks) clamp to the last real pool block so
+    # the index_map always names a mapped tile; its contents are masked to
+    # an exact no-op by kpos <= pos.  int32 keeps the SMEM table compact.
+    tbl = jnp.minimum(block_table.astype(jnp.int32), nb - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,         # block table, positions, window
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, D),
+                         lambda b, h, s, tbl, pos, win: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, Ds),
+                         lambda b, h, s, tbl, pos, win: (tbl[b, s], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, s, tbl, pos, win: (tbl[b, s], 0, h)),
+            pl.BlockSpec((1, bs, 1, Ds),
+                         lambda b, h, s, tbl, pos, win: (tbl[b, s], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, s, tbl, pos, win: (tbl[b, s], 0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, D),
+                               lambda b, h, s, tbl, pos, win: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_kvattn_kernel, block_size=bs, n_s=n_s, d=D, packed=packed,
+        kv_is_float=kv_is_float)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        interpret=interpret,
+    )(tbl, pos.astype(jnp.int32), window.astype(jnp.int32),
+      q, k, k_scale, v, v_scale)

@@ -104,8 +104,9 @@ def build(cfg: ModelConfig) -> Model:
                 cfg, policy, batch, max_seq),
             prefill=lambda params, policy, tokens, cache, **ex: T.prefill(
                 params, cfg, policy, tokens, cache, **ex),
-            decode_step=lambda params, policy, tokens, cache, pos: (
-                T.decode_step(params, cfg, policy, tokens, cache, pos)),
+            decode_step=lambda params, policy, tokens, cache, pos,
+            **kw: T.decode_step(params, cfg, policy, tokens, cache, pos,
+                                **kw),
             hidden_states=lambda params, tokens, policy=None, remat=False,
             **ex: T.hidden_states(params, cfg, tokens, policy=policy,
                                   remat=remat, **ex),
@@ -124,7 +125,9 @@ def build(cfg: ModelConfig) -> Model:
             cache_spec=lambda policy, batch, max_seq: R.state_spec(cfg, batch),
             prefill=lambda params, policy, tokens, cache, **ex: R.prefill(
                 params, cfg, policy, tokens, cache),
-            decode_step=lambda params, policy, tokens, cache, pos: (
+            # recurrent/enc-dec families take no attention-impl
+            # knobs; swallow them so the engine can pass one kwarg set
+            decode_step=lambda params, policy, tokens, cache, pos, **_kw: (
                 R.decode_step(params, cfg, policy, tokens, cache, pos)),
             hidden_states=lambda params, tokens, policy=None, remat=False,
             **ex: R.hidden_states(params, cfg, tokens, policy=policy,
@@ -143,7 +146,9 @@ def build(cfg: ModelConfig) -> Model:
                 cfg, policy, batch, max_seq),
             prefill=lambda params, policy, tokens, cache, **ex: G.prefill(
                 params, cfg, policy, tokens, cache),
-            decode_step=lambda params, policy, tokens, cache, pos: (
+            # recurrent/enc-dec families take no attention-impl
+            # knobs; swallow them so the engine can pass one kwarg set
+            decode_step=lambda params, policy, tokens, cache, pos, **_kw: (
                 G.decode_step(params, cfg, policy, tokens, cache, pos)),
             hidden_states=lambda params, tokens, policy=None, remat=False,
             **ex: G.hidden_states(params, cfg, tokens, policy=policy,
@@ -171,7 +176,9 @@ def build(cfg: ModelConfig) -> Model:
                 cfg, policy, batch, max_seq),
             prefill=lambda params, policy, tokens, cache, **ex: ED.prefill(
                 params, cfg, policy, tokens, cache, **ex),
-            decode_step=lambda params, policy, tokens, cache, pos: (
+            # recurrent/enc-dec families take no attention-impl
+            # knobs; swallow them so the engine can pass one kwarg set
+            decode_step=lambda params, policy, tokens, cache, pos, **_kw: (
                 ED.decode_step(params, cfg, policy, tokens, cache, pos)),
             hidden_states=lambda params, tokens, policy=None, remat=False,
             **ex: ED.hidden_states(params, cfg, tokens, policy=policy,

@@ -22,7 +22,10 @@ from repro.configs.base import ModelConfig
 from . import common as C
 from . import moe as MOE
 
-BIG_WINDOW = 1 << 30   # "no window" sentinel usable as a traced scalar
+# "no window" sentinel usable as a traced scalar — one constant shared
+# with the decode kernels' window operand (kernels/kvattn.NO_WINDOW), so
+# the mask arithmetic can never desynchronize from the model layer.
+from repro.kernels.kvattn import NO_WINDOW as BIG_WINDOW  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -252,14 +255,25 @@ def prefill(params, cfg: ModelConfig, policy: PrecisionPolicy, tokens,
 
 def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy,
                 tokens, cache, pos,
-                impl: str = "xla") -> Tuple[jax.Array, KV.KVCache]:
+                impl: str = "xla", attn_impl: Optional[str] = None,
+                attn_block_s: Optional[int] = None,
+                max_live: Optional[int] = None,
+                ) -> Tuple[jax.Array, KV.KVCache]:
     """tokens: (B, T); pos: scalar or (B,) position of the first new token.
 
     T > 1 is the engine's chunked ragged prefill: the T queries attend
     causally to ``pos + t`` cached tokens each.  ``cache`` may be the dense
     :class:`KV.KVCache` slab or a :class:`PKV.PagedKVCache` block pool —
-    the paged branch appends through the block table and gathers a dense
-    per-slot view for the existing fused attention (models/common.py).
+    paged appends go through the block table and single-token decode runs
+    the paged Pallas kernel, which resolves the block table *inside* the
+    kernel (no dense per-slot view; see models/common.attend_decode).
+
+    ``attn_impl`` picks the decode-attention path independently of the
+    GEMM ``impl`` (default: ``fused`` XLA, or the flash-decode kernels
+    when ``impl == "pallas"``); ``attn_block_s`` is the dense kernel's
+    tile height and ``max_live`` (static) the batch's live-context
+    high-water mark bounding paged traffic — the serving engine sets all
+    three.
     """
     paged = isinstance(cache, PKV.PagedKVCache)
     x = jnp.take(params["embed"], tokens, axis=0).astype(policy.compute_dtype)
@@ -301,7 +315,9 @@ def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy,
             cache_l = KV.append(cache_l, k, v, pos, policy.kv)
         win = layer_window(cfg, idx)
         attn = C.attend_decode(q, cache_l, policy.kv, pos, window=win,
-                               impl="fused" if impl != "pallas" else impl)
+                               impl=attn_impl
+                               or ("fused" if impl != "pallas" else impl),
+                               block_s=attn_block_s, max_live=max_live)
         xc = xc + C.linear(attn.reshape(B, T, -1), lp["wo"], policy, impl)
         h2 = C.rms_norm(xc, lp["ln2"], cfg.norm_eps)
         xc = xc + ffn(h2, lp, cfg, policy, impl)

@@ -46,6 +46,19 @@ class EngineConfig:
     blocks shared by all slots (default: dense-capacity parity,
     ``n_slots * max_seq / block_size`` — shrink it to hold more slots
     than a dense slab of equal memory could).
+
+    ``attn_impl`` picks the decode-attention path for KV-transformer
+    families: ``"kernel"`` (default) runs the Pallas flash-decode
+    kernels — paged engines resolve block tables *in-kernel*, and dense
+    engines traverse the slab at the same block granularity, which is
+    what makes dense and paged greedy streams byte-identical.
+    ``"xla"`` opts a *dense* engine back onto the fused-XLA attention —
+    useful off-TPU, where Pallas runs in interpret mode (Python-slow);
+    it forfeits bitwise parity with a paged twin, and paged engines
+    ignore it (in-kernel paging is the backend's point).  The default is
+    ``"kernel"`` on *every* backend deliberately: a host-dependent
+    default would make dense/paged parity — and greedy token streams —
+    vary by machine.
     """
 
     model: ModelConfig
@@ -58,6 +71,7 @@ class EngineConfig:
     block_size: int = 16
     n_blocks: Optional[int] = None
     prefill_chunk: int = 32
+    attn_impl: str = "kernel"
 
     def __post_init__(self):
         if not isinstance(self.model, ModelConfig):
@@ -78,6 +92,10 @@ class EngineConfig:
             raise EngineError(
                 f"unknown cache_kind {self.cache_kind!r} "
                 "(expected 'dense' or 'paged')")
+        if self.attn_impl not in ("kernel", "xla"):
+            raise EngineError(
+                f"unknown attn_impl {self.attn_impl!r} "
+                "(expected 'kernel' or 'xla')")
 
         # prompt bounds: prompts longer than a slot's context can never run
         if self.max_prompt is None:
@@ -131,7 +149,8 @@ class EngineConfig:
         the per-flag default values (e.g. ``max_seq=128``)."""
         d = dict(arch="smollm-360m", policy="w4a16kv8", slots=4,
                  max_seq=256, max_prompt=None, seed=0, cache_kind="dense",
-                 block_size=16, n_blocks=None, prefill_chunk=32)
+                 block_size=16, n_blocks=None, prefill_chunk=32,
+                 attn_impl="kernel")
         d.update(defaults)
         ap.add_argument("--arch", default=d["arch"])
         ap.add_argument("--reduced", action="store_true", default=True)
@@ -153,6 +172,11 @@ class EngineConfig:
         ap.add_argument("--prefill-chunk", type=int,
                         default=d["prefill_chunk"],
                         help="tokens per ragged-prefill step")
+        ap.add_argument("--attn-impl", choices=("kernel", "xla"),
+                        default=d["attn_impl"],
+                        help="decode attention: Pallas flash-decode "
+                             "kernels (byte-identical dense/paged) or "
+                             "fused XLA for dense engines off-TPU")
         return ap
 
     @classmethod
@@ -173,4 +197,5 @@ class EngineConfig:
                    max_seq=args.max_seq, max_prompt=args.max_prompt,
                    seed=args.seed, cache_kind=args.cache_kind,
                    block_size=args.block_size, n_blocks=args.n_blocks,
-                   prefill_chunk=args.prefill_chunk)
+                   prefill_chunk=args.prefill_chunk,
+                   attn_impl=args.attn_impl)

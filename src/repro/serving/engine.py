@@ -34,9 +34,13 @@ the true prompt (no bucket padding, no pad tokens) is pushed through
 multi-token decode steps of ``prefill_chunk`` tokens against a small B=1
 staging cache, then the already-quantized staging KV is spliced (dense) or
 block-scattered (paged) into the batch store.  Both backends run the same
-staging computation and the decode kernels consume a dense per-slot view
-either way, so the two engines produce **bit-identical greedy streams**
-(locked down by tests/test_engine_paged.py).  Recurrent-state and
+staging computation, and at decode both run the *same* per-block
+flash-decode update (kernels/kvattn.flash_block_update) over bit-identical
+KV tiles — dense walks the slab, paged resolves its block table inside
+the kernel (kernels/paged_kvattn.py, no dense gather) with the grid
+bounded by the batch's live context — so the two engines produce
+**bit-identical greedy streams** (locked down by
+tests/test_engine_paged.py).  Recurrent-state and
 modality-stub families (no KV cache to page / extra encoder inputs) use
 an exact-length one-shot prefill instead.
 
@@ -162,6 +166,21 @@ class Engine:
         self._chunked = self._kv_family and not self._has_extra
 
         self.scheduler = Scheduler(self.n_slots, admit_gate=gate)
+        #: KV-transformer families decode through the Pallas flash-decode
+        #: kernels (paged: in-kernel block-table indirection; dense: the
+        #: slab kernel at the *same* block granularity, so the two
+        #: backends traverse identical tiles and stay byte-identical).
+        #: ``attn_impl="xla"`` opts a dense engine back onto fused XLA
+        #: (useful off-TPU, where the kernels interpret); paged engines
+        #: always page in-kernel.  Recurrent/enc-dec families keep their
+        #: own decode paths.
+        self._attn_kernels = self.model.init_paged_cache is not None and (
+            self._paged or config.attn_impl == "kernel")
+        # dense flash-decode tile height: the paged block size when it
+        # divides the slab, else one whole-sequence tile
+        self._flash_bs = (self.block_size
+                          if self.max_seq % self.block_size == 0
+                          else self.max_seq)
         self.positions = jnp.zeros((self.n_slots,), jnp.int32)
         self.last_tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         self._next_rid = 0
@@ -176,7 +195,8 @@ class Engine:
         #: routes a subscribed rid's outputs here so interleaved streams
         #: (each driving step() on its own schedule) never lose tokens
         self._stream_bufs: Dict[int, List[RequestOutput]] = {}
-        self._decode = jax.jit(self._decode_fn)
+        self._decode = jax.jit(self._decode_fn,
+                               static_argnames=("max_live",))
         self._prefill = jax.jit(self._prefill_fn)
         self._chunk = jax.jit(self._chunk_fn)
         self._insert = jax.jit(_slot_insert)
@@ -198,10 +218,14 @@ class Engine:
                                       pos)
 
     def _decode_fn(self, params, tokens, cache, pos, seeds, steps, temp,
-                   top_k):
+                   top_k, max_live=None):
         from . import sampler as S
+        kw = {}
+        if self._attn_kernels:
+            kw = dict(attn_impl="pallas", attn_block_s=self._flash_bs,
+                      max_live=max_live)
         logits, cache = self.model.decode_step(params, self.policy, tokens,
-                                               cache, pos)
+                                               cache, pos, **kw)
         nxt = S.sample(S.slot_keys(seeds, steps), logits, temp, top_k)
         return nxt, cache
 
@@ -309,6 +333,17 @@ class Engine:
     def _reclaim(self, req: Request) -> None:
         self.allocator.free(self._block_map.pop(req.rid))
         self._map_slot_blocks(req.slot, [])   # sentinel row: writes dropped
+
+    def _live_bucket(self, running) -> int:
+        """Static live-context bound for the paged decode kernel: the
+        batch's high-water mark ``max(pos) + 1`` rounded up to whole
+        blocks and then to a power-of-two block count (so the number of
+        distinct decode compilations is O(log blocks_per_slot), not one
+        per context length), clipped to ``max_context``."""
+        hw = max(r.pos for r in running) + 1
+        nb = PKV.blocks_needed(hw, self.block_size)
+        nb = 1 << (nb - 1).bit_length()
+        return min(nb, self.blocks_per_slot) * self.block_size
 
     # -- prefill -----------------------------------------------------------
 
@@ -425,9 +460,13 @@ class Engine:
             seeds[r.slot] = r.seed
             steps[r.slot] = len(r.output)
 
+        # paged: bound the kernel's grid (and its HBM traffic) by the
+        # batch's live-context high-water mark, not worst-case max_seq
+        max_live = self._live_bucket(running) if self._paged else None
         nxt, self.cache = self._decode(self.params, self.last_tokens,
                                        self.cache, self.positions, seeds,
-                                       steps, temp, top_k)
+                                       steps, temp, top_k,
+                                       max_live=max_live)
         self.positions = self.positions + 1
         self.last_tokens = nxt[:, None]
         t = self.now()

@@ -195,14 +195,16 @@ def test_out_of_table_positions_dropped(key):
 
 
 # ---------------------------------------------------------------------------
-# Paged Pallas decode kernel (block-table gather + fused kernel)
+# Paged Pallas decode kernel (in-kernel block-table indirection; the full
+# sweep lives in tests/test_kernels_paged_attn.py)
 # ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("fmt", ["kv8", "kv4"])
 def test_paged_pallas_decode_matches_fused(key, fmt):
-    """kernels/ops.kvattn_decode_paged == the fused XLA path on the
-    gathered dense view (interpret mode on CPU)."""
+    """kernels/ops.kvattn_decode_paged ≈ the fused XLA path on a gathered
+    dense view (interpret mode on CPU) — the kernel itself never
+    gathers."""
     from repro.core import attention as A
     from repro.kernels import ops as kops
 

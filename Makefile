@@ -9,11 +9,18 @@
 #                    BENCH_paged_attn_smoke.json (the committed full-run
 #                    BENCH_paged_attn.json is untouched) and cross-checks
 #                    the kernel
+#   make bench-prefix CI-sized prefix-sharing benchmark; writes
+#                    BENCH_prefix_sharing_smoke.json (the committed
+#                    full-run BENCH_prefix_sharing.json is untouched)
+#                    and asserts sharing-on/off greedy streams identical
+#
+# BENCH_*_smoke.json artifacts are gitignored — smoke runs never dirty
+# the tree; the committed BENCH_*.json files come from full runs.
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench bench-paged bench-smoke
+.PHONY: test test-fast lint bench bench-paged bench-smoke bench-prefix
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,3 +40,6 @@ bench-paged:
 
 bench-smoke:
 	$(PY) -m benchmarks.kernel_attention --smoke
+
+bench-prefix:
+	$(PY) -m benchmarks.prefix_sharing --smoke

@@ -1,0 +1,132 @@
+"""Prefix sharing on a shared-system-prompt workload: TTFT, prefill
+work, and blocks resident with ``enable_prefix_caching`` on vs off.
+
+The workload is the one prefix caching exists for: every request is
+``system prompt (shared) + short unique suffix``.  With sharing enabled,
+the first request prefilled publishes the system prompt's full KV blocks
+in the content-addressed index; every later request maps those physical
+blocks into its own table — no prefill compute, no new allocation — and
+only stages its suffix.  The benchmark serves the same trace through two
+otherwise-identical paged engines and reports per-configuration:
+
+* ``ttft_p50`` / ``ttft_p90`` — first-token latency percentiles (s),
+* ``prefill_tokens_staged`` — prompt tokens actually pushed through the
+  chunked-prefill path (the compute sharing avoids),
+* ``cached_tokens_total`` — prompt tokens served from the prefix cache,
+* ``peak_blocks_live`` — high-water mark of referenced pool blocks
+  (shared blocks count once — the memory sharing avoids),
+* ``tokens_per_s`` — decode throughput (CPU-relative; same caveats as
+  benchmarks/paged_vs_dense.py).
+
+Greedy streams are asserted identical between the two engines — the
+speedup must be a pure scheduling/memory effect (DESIGN.md §5.2).
+
+    PYTHONPATH=src python -m benchmarks.prefix_sharing           # full
+    PYTHONPATH=src python -m benchmarks.prefix_sharing --smoke   # CI
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.engine import percentile_stats
+
+from .common import Reporter
+
+ARCH = "smollm-360m"
+POLICY = "w4a16kv8"
+BLOCK = 8
+
+
+def _workload(sys_len: int, n_req: int, suffix: int, vocab: int):
+    """Shared system prompt + per-request unique suffixes."""
+    rng = np.random.default_rng(7)
+    system = rng.integers(1, vocab, sys_len).tolist()
+    return system, [system + rng.integers(1, vocab, suffix).tolist()
+                    for _ in range(n_req)]
+
+
+def _serve(system, prompts, prefix: bool, slots: int, max_seq: int,
+           new_tokens: int):
+    cfg = get_reduced(ARCH)
+    eng = Engine(EngineConfig(
+        model=cfg, policy=POLICY, n_slots=slots, max_seq=max_seq,
+        max_prompt=max_seq, seed=0, cache_kind="paged", block_size=BLOCK,
+        prefill_chunk=BLOCK, enable_prefix_caching=prefix))
+    # warm-up: compile every graph off the clock.  The repeated prompt
+    # makes the second submission a prefix *hit* (compiling the warm
+    # paths: gather-seeded staging + tail chunks) and the block-aligned
+    # truncation a COW-tail hit (compiling the block copy); none of the
+    # warm-up tokens match the workload, so no usable prefix is seeded.
+    # The sharing-off engine serves the same sequence cold — both
+    # engines enter the measured burst with identical compile state.
+    w = [cfg.vocab - 1] * len(prompts[0])
+    for warm in (w, w, w[:2 * BLOCK]):
+        eng.submit(warm, SamplingParams(max_new_tokens=2))
+        eng.run_until_idle()
+    # trace part 1 — one request on the bare system prompt (the request
+    # that *publishes* the shared blocks when sharing is on; deployments
+    # warm a system prompt exactly like this).  Served by both engines so
+    # the comparison stays apples-to-apples.
+    eng.submit(list(system), SamplingParams(max_new_tokens=2))
+    eng.run_until_idle()
+    # trace part 2 — the measured burst of system+suffix requests
+    rids = [eng.submit(p, SamplingParams(max_new_tokens=new_tokens))
+            for p in prompts]
+    peak_live = 0
+    toks = 0
+    final = {}
+    t0 = eng.now()
+    while not eng.scheduler.idle:
+        outs = eng.step()
+        toks += len(outs)
+        peak_live = max(peak_live, eng.allocator.live_count)
+        final.update({o.rid: o for o in outs if o.finished})
+    wall = eng.now() - t0
+    outs = [final[r] for r in rids]
+    staged = sum(len(p) - 1 for p in prompts) \
+        - sum(o.cached_tokens for o in outs)
+    ttft = percentile_stats([o.ttft for o in outs])
+    return {"ttft_p50": ttft["p50"], "ttft_p90": ttft["p90"],
+            "prefill_tokens_staged": staged,
+            "cached_tokens_total": sum(o.cached_tokens for o in outs),
+            "peak_blocks_live": peak_live,
+            "kv_resident_bytes": eng.kv_resident_bytes(),
+            "tokens_per_s": toks / wall, "wall_s": wall}, \
+        [o.output_token_ids for o in outs]
+
+
+def run(reporter=None, smoke: bool = False) -> Reporter:
+    r = reporter or Reporter("prefix_sharing")
+    cfg = get_reduced(ARCH)
+    cases = [(16, 6, 4, 4, 64, 6)] if smoke else \
+        [(16, 8, 4, 4, 96, 8), (48, 16, 8, 4, 96, 8)]
+    for sys_len, n_req, suffix, slots, max_seq, new in cases:
+        system, prompts = _workload(sys_len, n_req, suffix, cfg.vocab)
+        off, stream_off = _serve(system, prompts, False, slots, max_seq,
+                                 new)
+        on, stream_on = _serve(system, prompts, True, slots, max_seq, new)
+        assert stream_on == stream_off, \
+            "prefix sharing changed greedy streams"
+        tag = f"sys{sys_len}_req{n_req}"
+        r.add(f"{tag}_off", off["wall_s"], **off)
+        r.add(f"{tag}_on", on["wall_s"], **on,
+              prefill_reduction=off["prefill_tokens_staged"]
+              / max(on["prefill_tokens_staged"], 1),
+              ttft_p50_speedup=off["ttft_p50"] / on["ttft_p50"])
+    return r
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; writes BENCH_prefix_sharing_smoke"
+                         ".json instead of the committed artifact")
+    args = ap.parse_args()
+    rep = run(smoke=args.smoke)
+    rep.print_csv()
+    path = ("BENCH_prefix_sharing_smoke.json" if args.smoke
+            else "BENCH_prefix_sharing.json")
+    print(f"\nwrote {rep.write_json(path)}")

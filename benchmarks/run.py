@@ -21,6 +21,8 @@ TABLES = {
               "Paged vs dense KV memory + throughput"),
     "paged_attn": ("benchmarks.kernel_attention:run_paged",
                    "In-kernel paged attention vs gather+kernel"),
+    "prefix": ("benchmarks.prefix_sharing",
+               "Prefix sharing on a shared-system-prompt workload"),
 }
 
 

@@ -23,7 +23,12 @@ Layout
   frontier is masked by the causal ``kpos <= pos`` attention mask.
 * **Allocator**: `BlockAllocator` is plain host-side Python (the engine
   mutates block tables between jit'd steps, exactly like vLLM's scheduler
-  sits outside the CUDA graphs).
+  sits outside the CUDA graphs).  Blocks are *refcounted*: the same
+  physical block may be mapped into several slots' tables (block-granular
+  prefix sharing), and it returns to the pool only when its last holder
+  releases it.  Refcount-0 blocks published in a :class:`PrefixIndex`
+  are retained in an LRU "cached" state and revived on a prefix hit or
+  evicted when the free list runs dry (DESIGN.md §5.2).
 
 The whole cache is a registered-dataclass pytree, so the model layer can
 ``jax.lax.scan`` over an ``(L, ...)``-stacked instance and the launch layer
@@ -39,10 +44,13 @@ entries at every written position are *bit-identical* to what the dense
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import kvcache as KV
 from . import quantize as Q
@@ -52,6 +60,14 @@ from .precision import FormatSpec
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PagedKVCache:
+    """Block-pooled quantized KV storage plus per-slot block tables.
+
+    A registered-dataclass pytree: the model layer scans an
+    ``(L, ...)``-stacked instance, the launch layer shards the pool axes.
+    Shape-derived properties are meaningful on per-layer (unstacked)
+    instances only — see the module docstring for the layout contract.
+    """
+
     k: jax.Array            # (n_blocks, block_size, H, Dstore)
     v: jax.Array            # (n_blocks, block_size, H, Dstore)
     k_scale: jax.Array      # (n_blocks, block_size, H, 1) f32
@@ -67,18 +83,22 @@ class PagedKVCache:
     # Shape-derived metadata — valid on per-layer (unstacked) instances.
     @property
     def n_blocks(self) -> int:
+        """Pool blocks (the block-table sentinel value is ``n_blocks``)."""
         return self.k.shape[0]
 
     @property
     def block_size(self) -> int:
+        """Tokens per pool block."""
         return self.k.shape[1]
 
     @property
     def n_slots(self) -> int:
+        """Decode slots (block-table rows)."""
         return self.block_table.shape[0]
 
     @property
     def blocks_per_slot(self) -> int:
+        """Logical blocks each slot's table row can map."""
         return self.block_table.shape[1]
 
     @property
@@ -92,47 +112,220 @@ class OutOfBlocksError(RuntimeError):
 
 
 class BlockAllocator:
-    """Host-side free-list allocator over ``n_blocks`` pool blocks.
+    """Host-side refcounted free-list allocator over ``n_blocks`` blocks.
+
+    Every pool block is in exactly one of three states (the lifecycle
+    state machine of DESIGN.md §5.2):
+
+    * **FREE** — on the free list, content meaningless.
+    * **LIVE** — refcount >= 1: mapped into one or more slots' block
+      tables.  ``alloc`` creates a LIVE block with one reference;
+      ``share`` takes another reference on it (prefix sharing maps the
+      same physical block into several tables); ``free`` drops one.
+    * **CACHED** — refcount 0 but *retained*: the block was marked
+      cacheable (its content is published in a :class:`PrefixIndex`), so
+      the last ``free`` parked it on an LRU list instead of the free
+      list.  ``share`` revives it (prefix hit); ``alloc`` evicts from
+      the LRU head when the free list runs dry, notifying ``on_evict``
+      so the index drops the dead entry.
 
     Invariants (locked down by tests/test_paged_kvcache.py):
-    * a block is never handed out twice while allocated (no double-alloc),
-    * ``free`` returns blocks to the pool and rejects double-frees,
-    * ``alloc`` raises :class:`OutOfBlocksError` rather than over-commit.
+    * a block is never handed out twice while LIVE or CACHED,
+    * ``free`` rejects double-frees; a block frees only at refcount 0,
+    * ``alloc`` raises :class:`OutOfBlocksError` rather than over-commit,
+    * eviction only ever touches refcount-0 (CACHED) blocks.
     """
 
-    def __init__(self, n_blocks: int):
+    def __init__(self, n_blocks: int,
+                 on_evict: Optional[Callable[[int], None]] = None):
+        """Create an all-free pool; ``on_evict(block)`` is called when a
+        CACHED block is evicted to satisfy an ``alloc``."""
         self.n_blocks = int(n_blocks)
+        self.on_evict = on_evict
         self.reset()
 
     def reset(self) -> None:
+        """Return every block to the FREE state and clear all refcounts."""
         self._free: List[int] = list(range(self.n_blocks - 1, -1, -1))
-        self._used: set = set()
+        self._ref: Dict[int, int] = {}
+        self._cacheable: set = set()
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
 
     @property
     def free_count(self) -> int:
+        """Strictly-free blocks (excludes CACHED ones)."""
         return len(self._free)
 
+    @property
+    def cached_count(self) -> int:
+        """Refcount-0 blocks retained for prefix reuse (evictable)."""
+        return len(self._cached)
+
+    @property
+    def live_count(self) -> int:
+        """Blocks with refcount >= 1 (mapped into at least one table)."""
+        return len(self._ref)
+
+    @property
+    def available(self) -> int:
+        """Blocks an ``alloc`` could hand out: FREE plus evictable."""
+        return len(self._free) + len(self._cached)
+
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        """True when ``alloc(n)`` would succeed (possibly by eviction)."""
+        return n <= self.available
+
+    def refcount(self, block: int) -> int:
+        """Current reference count of ``block`` (0 for FREE/CACHED)."""
+        return self._ref.get(block, 0)
 
     def alloc(self, n: int) -> List[int]:
-        if n > len(self._free):
+        """Hand out ``n`` private blocks, each at refcount 1.
+
+        Draws from the free list first, then evicts least-recently-used
+        CACHED blocks (calling ``on_evict``).  Raises
+        :class:`OutOfBlocksError` — taking nothing — when FREE + CACHED
+        cannot cover the request.
+        """
+        if n > self.available:
             raise OutOfBlocksError(
-                f"requested {n} blocks, {len(self._free)} free "
-                f"of {self.n_blocks}")
-        blocks = [self._free.pop() for _ in range(n)]
-        self._used.update(blocks)
+                f"requested {n} blocks, {len(self._free)} free + "
+                f"{len(self._cached)} cached of {self.n_blocks}")
+        blocks = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                b, _ = self._cached.popitem(last=False)     # LRU eviction
+                self._cacheable.discard(b)
+                if self.on_evict is not None:
+                    self.on_evict(b)
+            self._ref[b] = 1
+            blocks.append(b)
         return blocks
 
+    def share(self, block: int) -> None:
+        """Take one more reference on a LIVE block, or revive a CACHED
+        block to LIVE (refcount 1).  Raises ``ValueError`` for blocks the
+        allocator has not handed out (FREE blocks cannot be shared)."""
+        if block in self._ref:
+            self._ref[block] += 1
+        elif block in self._cached:
+            del self._cached[block]
+            self._ref[block] = 1
+        else:
+            raise ValueError(
+                f"block {block} is neither live nor cached (share of a "
+                "free block?)")
+
+    def set_cacheable(self, block: int) -> None:
+        """Mark a LIVE block as prefix-cacheable: when its refcount hits
+        zero it parks on the CACHED LRU instead of the free list."""
+        if block not in self._ref:
+            raise ValueError(f"block {block} is not live")
+        self._cacheable.add(block)
+
     def free(self, blocks: Sequence[int]) -> None:
+        """Drop one reference per block.  A block only leaves the LIVE
+        state at refcount 0: cacheable blocks park on the CACHED LRU
+        (most-recently-used end), the rest return to the free list.
+        Rejects blocks that are not LIVE (double free)."""
         for b in blocks:
-            if b not in self._used:
+            if b not in self._ref:
                 raise ValueError(f"block {b} is not allocated (double free?)")
-            self._used.remove(b)
-            self._free.append(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if b in self._cacheable:
+                    self._cached[b] = None       # MRU end of the LRU list
+                else:
+                    self._free.append(b)
+
+
+class PrefixIndex:
+    """Content-addressed index of immutable, block-aligned prefix KV.
+
+    Maps a *chain hash* of ``(salt, token ids of blocks 0..j)`` to the
+    pool block holding block ``j``'s KV.  The hash of block ``j`` folds
+    in the hash of block ``j-1``, so an entry identifies the whole
+    prefix, not just one block's tokens — matching walks the chain and
+    stops at the first miss.
+
+    ``salt`` must bind everything that determines the *bytes* a block
+    holds besides the token ids: the KV ``FormatSpec`` (the same tokens
+    quantize differently per format) and the layer set / model identity
+    (a pool block spans every layer of the stacked cache, so caches of
+    different depth or head geometry are never confusable).  Engines
+    derive it from their config; see DESIGN.md §5.2.
+
+    The index stores only host-side ids — the allocator owns block
+    lifetime.  ``drop_block`` is wired as the allocator's ``on_evict``
+    callback so evicted blocks leave the index atomically.
+    """
+
+    def __init__(self, block_size: int, salt: str = ""):
+        """Index full blocks of ``block_size`` tokens under ``salt``."""
+        self.block_size = int(block_size)
+        self._salt = hashlib.sha256(salt.encode()).digest()
+        self._by_hash: Dict[bytes, int] = {}
+        self._by_block: Dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        """Number of indexed blocks."""
+        return len(self._by_hash)
+
+    def chain_hashes(self, tokens: Sequence[int]) -> List[bytes]:
+        """Cumulative hash of every *full* block-aligned prefix of
+        ``tokens`` — entry ``j`` keys tokens ``[0, (j+1)*block_size)``."""
+        bs = self.block_size
+        out, h = [], self._salt
+        for j in range(len(tokens) // bs):
+            m = hashlib.sha256(h)
+            m.update(np.asarray(tokens[j * bs:(j + 1) * bs],
+                                np.int64).tobytes())
+            h = m.digest()
+            out.append(h)
+        return out
+
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Longest indexed chain covering a block-aligned prefix of
+        ``tokens``; returns the pool blocks in logical order (possibly
+        empty).  Does not touch refcounts — callers pin the returned
+        blocks via ``BlockAllocator.share`` before using them."""
+        return self.match_chain(self.chain_hashes(tokens))
+
+    def match_chain(self, hashes: Sequence[bytes]) -> List[int]:
+        """:meth:`match` over precomputed :meth:`chain_hashes` — callers
+        that also register later reuse one hash pass per prompt."""
+        blocks = []
+        for h in hashes:
+            b = self._by_hash.get(h)
+            if b is None:
+                break
+            blocks.append(b)
+        return blocks
+
+    def register(self, chain_hash: bytes, block: int) -> bool:
+        """Publish ``block`` as the holder of ``chain_hash``'s KV.
+
+        Returns False (no-op) when the hash is already served by another
+        block — first writer wins; the duplicate stays private — or when
+        the block already serves another hash."""
+        if chain_hash in self._by_hash or block in self._by_block:
+            return False
+        self._by_hash[chain_hash] = block
+        self._by_block[block] = chain_hash
+        return True
+
+    def drop_block(self, block: int) -> None:
+        """Forget ``block`` (allocator eviction callback); idempotent."""
+        h = self._by_block.pop(block, None)
+        if h is not None:
+            del self._by_hash[h]
 
 
 def blocks_needed(n_tokens: int, block_size: int) -> int:
+    """Blocks covering ``n_tokens`` tokens (at least one)."""
     return max(1, -(-int(n_tokens) // int(block_size)))
 
 
@@ -267,7 +460,7 @@ def gather_view(cache: PagedKVCache,
 
 
 def scatter_slot(cache: PagedKVCache, dense: KV.KVCache,
-                 slot: jax.Array) -> PagedKVCache:
+                 slot: jax.Array, start: jax.Array = 0) -> PagedKVCache:
     """Move one prefilled single-slot dense cache into ``slot``'s blocks.
 
     ``dense`` holds B=1 *already-quantized* KV for logical positions
@@ -275,7 +468,10 @@ def scatter_slot(cache: PagedKVCache, dense: KV.KVCache,
     copied verbatim — no requantization — so the paged cache ends up
     bit-identical to a dense-slab splice of the same buffer.  Positions
     beyond the slot's allocated blocks hit sentinel table entries and are
-    dropped.
+    dropped; positions below ``start`` are dropped too — on a prefix hit
+    the staging buffer's head is bytes *gathered from* shared pool blocks
+    (:func:`gather_slot`), and rewriting them would be pure redundant
+    HBM traffic proportional to the shared prefix.
     """
     S = dense.k.shape[1]
     slot = jnp.asarray(slot, jnp.int32)
@@ -283,6 +479,8 @@ def scatter_slot(cache: PagedKVCache, dense: KV.KVCache,
     row = jax.lax.dynamic_slice_in_dim(cache.block_table, slot, 1, 0)
     row_cache = dataclasses.replace(cache, block_table=row)
     flat = _flat_indices(row_cache, tok).reshape(-1)
+    flat = jnp.where(tok.reshape(-1) >= jnp.asarray(start, jnp.int32),
+                     flat, jnp.int32(cache.n_blocks * cache.block_size))
     put = lambda pool, val: _pool_scatter(pool, flat, val[0])
     return PagedKVCache(
         k=put(cache.k, dense.k), v=put(cache.v, dense.v),
@@ -291,6 +489,51 @@ def scatter_slot(cache: PagedKVCache, dense: KV.KVCache,
         block_table=cache.block_table,
         length=cache.length.at[slot].set(dense.length[0]),
     )
+
+
+def copy_block(cache: PagedKVCache, src: jax.Array,
+               dst: jax.Array) -> PagedKVCache:
+    """Copy one pool block's K/V/scale bytes ``src`` → ``dst``.
+
+    The device half of copy-on-write materialization (DESIGN.md §5.2):
+    when a slot would append into a *shared* block, the engine allocates
+    a private ``dst``, copies the shared block's already-quantized bytes
+    (no requantization — COW twins stay bit-identical to a cold prefill),
+    and maps ``dst`` into the slot's table instead.  Works on per-layer
+    and ``(L, ...)``-stacked caches alike: the block axis is located
+    relative to the trailing ``(block, token, head, depth)`` layout, so
+    one jit covers both.  Tables and lengths are untouched.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(pool):
+        ax = pool.ndim - 4          # (..., n_blocks, block_size, H, d)
+        val = jax.lax.dynamic_index_in_dim(pool, src, axis=ax,
+                                           keepdims=True)
+        return jax.lax.dynamic_update_slice_in_dim(pool, val, dst, axis=ax)
+
+    return dataclasses.replace(cache, k=cp(cache.k), v=cp(cache.v),
+                               k_scale=cp(cache.k_scale),
+                               v_scale=cp(cache.v_scale))
+
+
+def gather_slot(cache: PagedKVCache, slot: jax.Array,
+                n_ctx: int) -> KV.KVCache:
+    """Dense ``(1, n_ctx, H, Dstore)`` view of one slot's logical context.
+
+    The reverse of :func:`scatter_slot`: on a prefix-cache hit the engine
+    seeds its B=1 prefill staging cache with the slot's already-mapped
+    shared blocks, so tail-token attention reads the *exact* bytes a cold
+    prefill would have produced (bitwise — the gather is a pure copy).
+    Positions beyond the mapped blocks clamp to finite garbage that the
+    causal mask removes, same as :func:`gather_view`.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    row = jax.lax.dynamic_slice_in_dim(cache.block_table, slot, 1, 0)
+    ln = jax.lax.dynamic_slice_in_dim(cache.length, slot, 1, 0)
+    sub = dataclasses.replace(cache, block_table=row, length=ln)
+    return gather_view(sub, n_ctx)
 
 
 def kv_bytes(cache) -> int:

@@ -1,3 +1,5 @@
+"""Public serving surface: engine, config, request/output types, and the
+paged-KV primitives (allocator, prefix index) callers may introspect."""
 from .config import EngineConfig, EngineError                  # noqa: F401
 from .engine import Engine, quantize_params, percentile_stats  # noqa: F401
 from .request import (FinishReason, Request, RequestOutput,    # noqa: F401
@@ -5,4 +7,4 @@ from .request import (FinishReason, Request, RequestOutput,    # noqa: F401
 from .scheduler import Scheduler                               # noqa: F401
 
 from repro.core.paged_kvcache import (                         # noqa: F401
-    BlockAllocator, OutOfBlocksError, PagedKVCache)
+    BlockAllocator, OutOfBlocksError, PagedKVCache, PrefixIndex)

@@ -45,7 +45,15 @@ class EngineConfig:
     Paged knobs: ``block_size`` tokens per KV block; ``n_blocks`` pool
     blocks shared by all slots (default: dense-capacity parity,
     ``n_slots * max_seq / block_size`` — shrink it to hold more slots
-    than a dense slab of equal memory could).
+    than a dense slab of equal memory could); ``enable_prefix_caching``
+    turns on block-granular prefix sharing (paged backends only): full
+    prompt blocks are published in a content-addressed index, and a new
+    request whose prompt matches a cached chain maps the shared physical
+    blocks into its table — no prefill compute, no new allocation — with
+    copy-on-write materialization of any shared block it would append
+    into (DESIGN.md §5.2).  Greedy streams are byte-identical with the
+    flag on or off; ``RequestOutput.cached_tokens`` reports per-request
+    hits.
 
     ``attn_impl`` picks the decode-attention path for KV-transformer
     families: ``"kernel"`` (default) runs the Pallas flash-decode
@@ -72,8 +80,10 @@ class EngineConfig:
     n_blocks: Optional[int] = None
     prefill_chunk: int = 32
     attn_impl: str = "kernel"
+    enable_prefix_caching: bool = False
 
     def __post_init__(self):
+        """Validate and normalize the configuration (raises EngineError)."""
         if not isinstance(self.model, ModelConfig):
             raise EngineError(
                 f"model must be a ModelConfig, got {type(self.model)!r}")
@@ -125,11 +135,18 @@ class EngineConfig:
                 raise EngineError(
                     "paged cache does not support modality-stub families "
                     "(their prefill consumes extra encoder inputs)")
+        elif self.enable_prefix_caching:
+            # prefix sharing maps one physical block into several block
+            # tables — only the paged backend has blocks to share
+            raise EngineError(
+                "enable_prefix_caching requires cache_kind='paged' "
+                f"(got {self.cache_kind!r})")
 
     # -- derived capacity --------------------------------------------------
 
     @property
     def blocks_per_slot(self) -> int:
+        """Logical blocks each slot's table row maps (paged)."""
         return self.max_seq // self.block_size
 
     @property
@@ -150,7 +167,7 @@ class EngineConfig:
         d = dict(arch="smollm-360m", policy="w4a16kv8", slots=4,
                  max_seq=256, max_prompt=None, seed=0, cache_kind="dense",
                  block_size=16, n_blocks=None, prefill_chunk=32,
-                 attn_impl="kernel")
+                 attn_impl="kernel", enable_prefix_caching=False)
         d.update(defaults)
         ap.add_argument("--arch", default=d["arch"])
         ap.add_argument("--reduced", action="store_true", default=True)
@@ -177,6 +194,11 @@ class EngineConfig:
                         help="decode attention: Pallas flash-decode "
                              "kernels (byte-identical dense/paged) or "
                              "fused XLA for dense engines off-TPU")
+        ap.add_argument("--enable-prefix-caching", action="store_true",
+                        default=d["enable_prefix_caching"],
+                        help="share full prompt-prefix KV blocks across "
+                             "requests (paged backend only; "
+                             "copy-on-write, byte-identical streams)")
         return ap
 
     @classmethod
@@ -198,4 +220,5 @@ class EngineConfig:
                    seed=args.seed, cache_kind=args.cache_kind,
                    block_size=args.block_size, n_blocks=args.n_blocks,
                    prefill_chunk=args.prefill_chunk,
-                   attn_impl=args.attn_impl)
+                   attn_impl=args.attn_impl,
+                   enable_prefix_caching=args.enable_prefix_caching)

@@ -27,7 +27,13 @@ backends:
   and a host-side :class:`BlockAllocator`.  Admission is gated on free
   blocks (the scheduler's ``admit_gate``) and a request's blocks are
   reclaimed when it retires, so resident KV memory scales with *live
-  context*, not ``n_slots × max_seq``.
+  context*, not ``n_slots × max_seq``.  With
+  ``enable_prefix_caching``, full prompt blocks are additionally
+  published in a content-addressed :class:`PrefixIndex`; a new request
+  whose prompt matches a cached chain maps the *same physical blocks*
+  into its table (refcounted, copy-on-write at the append frontier) —
+  skipping their prefill compute and allocation entirely — and reports
+  the hit as ``RequestOutput.cached_tokens`` (DESIGN.md §5.2).
 
 Prompt ingestion is **chunked ragged prefill** for every KV-cache family:
 the true prompt (no bucket padding, no pad tokens) is pushed through
@@ -119,7 +125,17 @@ def _slot_insert(batch_cache, slot_cache, slot: jax.Array):
 
 
 class Engine:
+    """Continuous-batching serving engine (see the module docstring).
+
+    Construct with a validated :class:`EngineConfig` (and optionally
+    pre-built/pre-quantized params); drive with ``submit``/``step`` or
+    the ``generate``/``stream`` conveniences.  Not thread-safe: one
+    engine, one driver.
+    """
+
     def __init__(self, config: EngineConfig, params=None):
+        """Build the model, quantize weights, and allocate the KV store
+        (dense slab or paged pool + allocator + optional prefix index)."""
         self.config = config
         cfg = config.model
         self.model_cfg = cfg
@@ -146,6 +162,7 @@ class Engine:
         self._has_extra = bool(self._extra)
 
         self._paged = config.cache_kind == "paged"
+        self.prefix_index: Optional[PKV.PrefixIndex] = None
         if self._paged:
             # family/shape feasibility was validated by EngineConfig
             self.blocks_per_slot = config.blocks_per_slot
@@ -156,6 +173,18 @@ class Engine:
                 self.policy, self.n_slots, self.n_blocks, self.block_size,
                 self.blocks_per_slot)
             gate = self._admit_gate
+            if config.enable_prefix_caching:
+                # the salt binds everything besides token ids that
+                # determines a block's bytes: KV format and the layer
+                # set / head geometry a pool block spans (DESIGN.md §5.2)
+                self.prefix_index = PKV.PrefixIndex(
+                    self.block_size,
+                    salt=f"{cfg.name}|L{cfg.n_layers}|Hkv{cfg.n_kv_heads}"
+                         f"|hd{cfg.hd}|{self.policy.kv}")
+                self.allocator.on_evict = self.prefix_index.drop_block
+                #: rid → (shared src block, private dst block) for a
+                #: pending copy-on-write tail materialization
+                self._cow_map: Dict[int, tuple] = {}
         else:
             self.cache = self.model.init_cache(self.policy, self.n_slots,
                                                self.max_seq)
@@ -201,7 +230,12 @@ class Engine:
         self._chunk = jax.jit(self._chunk_fn)
         self._insert = jax.jit(_slot_insert)
         self._scatter = jax.jit(
-            jax.vmap(PKV.scatter_slot, in_axes=(0, 0, None)))
+            jax.vmap(PKV.scatter_slot, in_axes=(0, 0, None, None)))
+        if self.prefix_index is not None:
+            self._cow_copy = jax.jit(PKV.copy_block)
+            self._gather_slot = jax.jit(jax.vmap(
+                lambda c, s: PKV.gather_slot(c, s, self._staging_len),
+                in_axes=(0, None)))
         self.t0 = time.perf_counter()
         self.iteration = 0
 
@@ -232,6 +266,7 @@ class Engine:
     # -- public API --------------------------------------------------------
 
     def now(self) -> float:
+        """Monotonic seconds since engine construction (metric clock)."""
         return time.perf_counter() - self.t0
 
     def submit(self, prompt: Sequence[int],
@@ -311,16 +346,67 @@ class Engine:
                    self.max_seq)
         return PKV.blocks_needed(max(toks, 1), self.block_size)
 
+    def _match_prefix(self, req: Request):
+        """Longest cached block chain matching the request's prompt.
+
+        Returns ``(shared, cow_src)``: ``shared`` are read-only-shareable
+        full blocks — they cover prompt tokens the slot will never write
+        (everything strictly below the decode frontier ``n - 1``) —
+        and ``cow_src`` is the at-most-one matched block the slot *would*
+        append into (the block holding position ``n - 1``, matched only
+        when the prompt length is block-aligned): it must be materialized
+        copy-on-write, never mapped shared."""
+        if self.prefix_index is None:
+            return [], None
+        req.prefix_hashes = self.prefix_index.chain_hashes(req.prompt)
+        matched = self.prefix_index.match_chain(req.prefix_hashes)
+        ro = (len(req.prompt) - 1) // self.block_size
+        return matched[:ro], (matched[ro] if len(matched) > ro else None)
+
     def _admit_gate(self, req: Request) -> bool:
         """Admission gate with *reservation* semantics: returning True
         also allocates the request's worst-case blocks, so admitting
         several requests in one scheduler pass can never over-commit the
         pool (each gate call sees the allocator state left by the
-        previous admission)."""
+        previous admission).
+
+        With prefix caching, matched blocks are mapped shared (one more
+        reference on the same physical block) and only the remainder is
+        allocated — a prefix hit admits where a cold request would have
+        been deferred.  The COW source is pinned (shared) until
+        ``_do_prefill`` finishes the copy, so a sibling admission's
+        eviction can never race it away."""
         need = self._blocks_for(req)
-        if not self.allocator.can_alloc(need):
+        shared, cow_src = self._match_prefix(req)
+        pinned = shared + ([cow_src] if cow_src is not None else [])
+        for b in pinned:
+            self.allocator.share(b)
+        if cow_src is not None and \
+                not self.allocator.can_alloc(need - len(shared)):
+            # the COW source is a *transient* extra block (pinned only
+            # until the copy lands); when that +1 doesn't fit, degrade
+            # the COW tail to a recomputed miss rather than defer a
+            # request the unshared engine would admit (no livelock:
+            # nothing else may ever free the missing block)
+            self.allocator.free([cow_src])
+            cow_src = None
+            pinned = shared
+        if not self.allocator.can_alloc(need - len(shared)):
+            self.allocator.free(pinned)      # unpin: admission deferred
             return False
-        self._block_map[req.rid] = self.allocator.alloc(need)
+        fresh = self.allocator.alloc(need - len(shared))
+        self._block_map[req.rid] = shared + fresh
+        if self.prefix_index is not None:
+            bs = self.block_size
+            if cow_src is not None:
+                # the COW destination is the first fresh block: logical
+                # index len(shared), the block holding position n - 1
+                self._cow_map[req.rid] = (cow_src, fresh[0])
+                req.prefix_skip = len(req.prompt) - 1
+                # the re-decoded last prompt token is honest recompute
+                req.cached_tokens = len(shared) * bs + (bs - 1)
+            else:
+                req.prefix_skip = req.cached_tokens = len(shared) * bs
         return True
 
     def _map_slot_blocks(self, slot: int, blocks: List[int]) -> None:
@@ -330,7 +416,28 @@ class Engine:
         tbl = self.cache.block_table.at[:, slot].set(row)
         self.cache = dataclasses.replace(self.cache, block_table=tbl)
 
+    def _register_prefix(self, req: Request) -> None:
+        """Publish the slot's immutable full prompt blocks in the prefix
+        index: every block strictly below the decode frontier ``n - 1``
+        is fully written by prefill and never touched again, so its bytes
+        are safe to share for the rest of its lifetime.  Blocks that were
+        themselves mapped from the index re-register as no-ops; a lost
+        register race (an identical prompt admitted in the same scheduler
+        pass) leaves the duplicate block private — correct, just not
+        deduplicated."""
+        nb = (len(req.prompt) - 1) // self.block_size
+        # chain hashes were computed once at the admission gate; the
+        # chain property makes hashes[:nb] exactly the truncated prompt's
+        for h, b in zip(req.prefix_hashes[:nb],
+                        self._block_map[req.rid][:nb]):
+            if self.prefix_index.register(h, b):
+                self.allocator.set_cacheable(b)
+
     def _reclaim(self, req: Request) -> None:
+        """Release the request's block references.  Without sharing this
+        frees the blocks outright; with sharing it decrefs — blocks other
+        slots still map stay live, and index-published blocks park on the
+        allocator's CACHED LRU for future prefix hits."""
         self.allocator.free(self._block_map.pop(req.rid))
         self._map_slot_blocks(req.slot, [])   # sentinel row: writes dropped
 
@@ -353,25 +460,67 @@ class Engine:
         Protocol (unchanged from the dense engine): the last prompt token
         is *not* consumed here — the slot is left at ``pos = n - 1`` with
         ``last_tokens = prompt[-1]`` and the next engine iteration decodes
-        it, producing the first output token."""
+        it, producing the first output token.
+
+        On a prefix-cache hit the slot's table already maps the shared
+        blocks (the gate set them up), so only tokens from
+        ``req.prefix_skip`` onward are staged: the staging cache is
+        seeded by gathering the slot's mapped context — bitwise the bytes
+        a cold prefill of the prefix would have produced — so tail-token
+        attention, and therefore every downstream byte, matches the
+        sharing-disabled engine exactly.  A pending copy-on-write tail is
+        materialized first (device block copy; the pinned source is
+        released once copied)."""
         n = len(req.prompt)
         if self._paged:
             # blocks were reserved by the admission gate
             self._map_slot_blocks(req.slot, self._block_map[req.rid])
-        if n > 1 and self._chunked:
-            # chunked ragged prefill: true prompt length, no pad tokens
-            cache1 = self.model.init_cache(self.policy, 1, self._staging_len)
-            s = 0
-            while s < n - 1:
-                t = min(self.prefill_chunk, n - 1 - s)
-                toks = jnp.asarray(req.prompt[s:s + t], jnp.int32)[None]
-                _, cache1 = self._chunk(self.params, toks, cache1,
-                                        jnp.int32(s))
-                s += t
-            if self._paged:
-                self.cache = self._scatter(self.cache, cache1, req.slot)
-            else:
-                self.cache = self._insert(self.cache, cache1, req.slot)
+            if self.prefix_index is not None:
+                cow = self._cow_map.pop(req.rid, None)
+                if cow is not None:
+                    src, dst = cow
+                    self.cache = self._cow_copy(self.cache, jnp.int32(src),
+                                                jnp.int32(dst))
+                    self.allocator.free([src])     # unpin the COW source
+        skip = req.prefix_skip
+        if self._chunked:
+            if n - 1 > skip:
+                # chunked ragged prefill: true prompt length, no pad
+                # tokens; a prefix hit starts mid-prompt against a
+                # staging cache pre-seeded with the shared blocks' bytes
+                if skip:
+                    cache1 = self._gather_slot(self.cache,
+                                               jnp.int32(req.slot))
+                    cache1 = dataclasses.replace(
+                        cache1, length=jnp.full_like(cache1.length, skip))
+                else:
+                    cache1 = self.model.init_cache(self.policy, 1,
+                                                   self._staging_len)
+                s = skip
+                while s < n - 1:
+                    t = min(self.prefill_chunk, n - 1 - s)
+                    toks = jnp.asarray(req.prompt[s:s + t], jnp.int32)[None]
+                    _, cache1 = self._chunk(self.params, toks, cache1,
+                                            jnp.int32(s))
+                    s += t
+                if self._paged:
+                    # scatter only from the prefix frontier on: positions
+                    # below `skip` are bytes gathered *out of* shared
+                    # blocks — rewriting them would be identity traffic
+                    self.cache = self._scatter(self.cache, cache1,
+                                               req.slot, jnp.int32(skip))
+                else:
+                    self.cache = self._insert(self.cache, cache1, req.slot)
+            elif self._paged and skip and n > 1:
+                # full prefix hit (skip == n - 1): no scatter ran, so set
+                # the slot's advisory length directly — live_ctx's
+                # "length >= every true frontier" over-estimate contract
+                # must hold for the gather fallbacks even though the
+                # engine's own decode always passes max_live
+                ln = self.cache.length.at[:, req.slot].set(n - 1)
+                self.cache = dataclasses.replace(self.cache, length=ln)
+            if self.prefix_index is not None:
+                self._register_prefix(req)
         elif n > 1 or self._has_extra:
             # one-shot exact-length prefill: recurrent-state families (no
             # multi-token decode) and modality-stub families (extra
@@ -584,6 +733,7 @@ class Engine:
 
 
 def percentile_stats(vals: List[float]) -> Dict[str, float]:
+    """p50/p90/p95/p99 of a metric list ({} when empty)."""
     if not vals:
         return {}
     a = np.asarray(vals)

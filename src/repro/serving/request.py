@@ -15,6 +15,8 @@ from .config import EngineError
 
 
 class Status(enum.Enum):
+    """Request lifecycle state (engine-internal)."""
+
     WAITING = "waiting"
     RUNNING = "running"
     FINISHED = "finished"
@@ -73,6 +75,7 @@ class SamplingParams:
                 f"stop_token_ids must be a sequence of ints: {e}") from e
 
     def stops_on(self, token: int) -> Optional[FinishReason]:
+        """Finish reason the token triggers (eos/stop), or None."""
         if self.eos_id is not None and token == self.eos_id:
             return FinishReason.EOS
         if token in self.stop_token_ids:
@@ -88,14 +91,19 @@ class RequestOutput:
     (one per decode step; empty for a pure finish notification such as an
     abort); ``output_token_ids`` is the cumulative output so far.  When
     ``finished`` is True, ``finish_reason`` is set and the timing fields
-    carry the request's final metrics.
+    carry the request's final metrics.  ``cached_tokens`` counts the
+    prompt tokens whose KV was served from the prefix cache instead of
+    being recomputed (always 0 unless the engine runs with
+    ``enable_prefix_caching``).
     """
+
     rid: int
     prompt_len: int
     new_token_ids: List[int]
     output_token_ids: List[int]
     finished: bool = False
     finish_reason: Optional[FinishReason] = None
+    cached_tokens: int = 0
 
     # final metrics (populated on the finished output) -------------------
     ttft: Optional[float] = None        # first-token latency (s)
@@ -125,21 +133,33 @@ class Request:
     finish_reason: Optional[FinishReason] = None
     first_token_time: Optional[float] = None    # TTFT measurement
     finish_time: Optional[float] = None
+    #: prompt tokens served from the prefix cache (reported on outputs)
+    cached_tokens: int = 0
+    #: prompt tokens whose staged prefill is skipped on a prefix hit —
+    #: the block-aligned shared extent, or ``prompt_len - 1`` after a
+    #: copy-on-write tail materialization (engine-internal)
+    prefix_skip: int = 0
+    #: chain hashes of the prompt's full blocks, computed once at the
+    #: admission gate and reused for registration (engine-internal)
+    prefix_hashes: List[bytes] = dataclasses.field(default_factory=list)
 
     @property
     def ttft(self) -> Optional[float]:
+        """First-token latency in seconds (None until measured)."""
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.arrival_time
 
     @property
     def latency(self) -> Optional[float]:
+        """End-to-end latency in seconds (None until finished)."""
         if self.finish_time is None:
             return None
         return self.finish_time - self.arrival_time
 
     @property
     def done(self) -> bool:
+        """True once the request has finished (any reason)."""
         return self.status == Status.FINISHED
 
     def make_output(self, new_tokens: List[int]) -> RequestOutput:
@@ -150,5 +170,6 @@ class Request:
             new_token_ids=list(new_tokens),
             output_token_ids=list(self.output),
             finished=done, finish_reason=self.finish_reason if done else None,
+            cached_tokens=self.cached_tokens,
             ttft=self.ttft if done else None,
             latency=self.latency if done else None)

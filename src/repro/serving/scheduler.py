@@ -24,6 +24,9 @@ from .request import Request, Status
 
 @dataclasses.dataclass
 class Scheduler:
+    """FCFS continuous-batching scheduler over ``n_slots`` decode slots
+    (see the module docstring for the admission discipline)."""
+
     n_slots: int
     #: optional block-aware admission gate (paged KV engines): called with
     #: the queue head exactly once per admitted request; False defers
@@ -54,6 +57,7 @@ class Scheduler:
             return False
 
     def free_slots(self) -> List[int]:
+        """Indices of currently unoccupied decode slots."""
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def admit(self) -> List[Request]:
@@ -76,13 +80,16 @@ class Scheduler:
         return admitted
 
     def running(self) -> List[Request]:
+        """Requests currently occupying slots, in slot order."""
         return [r for r in self.slots if r is not None]
 
     def finish(self, req: Request, t: float) -> None:
+        """Retire a running request at time ``t`` and free its slot."""
         req.status = Status.FINISHED
         req.finish_time = t
         self.slots[req.slot] = None
 
     @property
     def idle(self) -> bool:
+        """True when nothing is waiting or running."""
         return not self.waiting and all(r is None for r in self.slots)

@@ -86,6 +86,209 @@ class TestAllocator:
 
 
 # ---------------------------------------------------------------------------
+# Refcounted sharing + prefix-cache retention (DESIGN.md §5.2 lifecycle)
+# ---------------------------------------------------------------------------
+
+
+class TestRefcounting:
+    def test_share_release_interleavings(self):
+        """A block frees only at refcount 0, whatever the interleaving."""
+        a = PKV.BlockAllocator(4)
+        [b] = a.alloc(1)
+        a.share(b)                      # rc 2
+        a.share(b)                      # rc 3
+        assert a.refcount(b) == 3
+        a.free([b])                     # rc 2 — still live
+        assert a.refcount(b) == 2 and a.free_count == 3
+        a.share(b)                      # rc 3 again after a partial release
+        a.free([b, b])                  # rc 1
+        assert a.refcount(b) == 1 and a.free_count == 3
+        a.free([b])                     # rc 0 → FREE
+        assert a.refcount(b) == 0 and a.free_count == 4
+        with pytest.raises(ValueError):
+            a.free([b])                 # double free still rejected
+
+    def test_share_of_free_block_rejected(self):
+        a = PKV.BlockAllocator(2)
+        held = a.alloc(1)
+        free_block = next(b for b in range(2) if b not in held)
+        with pytest.raises(ValueError):
+            a.share(free_block)
+
+    def test_shared_alloc_accounting(self):
+        """Sharing takes no new blocks: OutOfBlocks triggers on physical
+        blocks, not references."""
+        a = PKV.BlockAllocator(4)
+        blks = a.alloc(3)
+        for b in blks:
+            a.share(b)                  # 6 references, 3 physical blocks
+        assert a.free_count == 1 and a.can_alloc(1)
+        a.alloc(1)
+        with pytest.raises(PKV.OutOfBlocksError):
+            a.alloc(1)
+        # releasing one reference per shared block frees nothing yet
+        a.free(blks)
+        assert a.free_count == 0 and not a.can_alloc(1)
+        a.free(blks)
+        assert a.free_count == 3
+
+    def test_cacheable_parks_on_lru_and_revives(self):
+        a = PKV.BlockAllocator(4)
+        [b] = a.alloc(1)
+        a.set_cacheable(b)
+        a.free([b])
+        assert a.refcount(b) == 0
+        assert a.cached_count == 1 and a.free_count == 3
+        assert a.available == 4         # cached blocks still allocatable
+        a.share(b)                      # prefix hit: revive to LIVE
+        assert a.refcount(b) == 1 and a.cached_count == 0
+
+    def test_lru_eviction_order_and_callback(self):
+        """alloc evicts refcount-0 cached blocks oldest-first, notifying
+        on_evict, and never before the free list is exhausted."""
+        evicted = []
+        a = PKV.BlockAllocator(3, on_evict=evicted.append)
+        b0, b1, b2 = a.alloc(3)
+        for b in (b0, b1, b2):
+            a.set_cacheable(b)
+        a.free([b1])                    # LRU order: b1 (oldest), then b2
+        a.free([b2])
+        got = a.alloc(2)
+        assert evicted == [b1, b2]      # oldest-first
+        assert set(got) == {b1, b2}
+        assert a.refcount(b0) == 1      # live block untouched
+
+    def test_eviction_never_touches_live_blocks(self):
+        a = PKV.BlockAllocator(3, on_evict=lambda b: None)
+        live = a.alloc(2)
+        [c] = a.alloc(1)
+        a.set_cacheable(c)
+        a.free([c])                     # 0 free, 1 cached, 2 live
+        a.alloc(1)                      # must evict c, not a live block
+        for b in live:
+            assert a.refcount(b) == 1
+        with pytest.raises(PKV.OutOfBlocksError):
+            a.alloc(1)                  # only live blocks remain
+
+    def test_set_cacheable_requires_live(self):
+        a = PKV.BlockAllocator(2)
+        with pytest.raises(ValueError):
+            a.set_cacheable(0)
+
+    def test_reset_clears_sharing_state(self):
+        a = PKV.BlockAllocator(2)
+        [b] = a.alloc(1)
+        a.set_cacheable(b)
+        a.share(b)
+        a.reset()
+        assert a.free_count == 2 and a.cached_count == 0
+        assert a.refcount(b) == 0
+
+
+class TestPrefixIndex:
+    def test_chain_hashes_full_blocks_only(self):
+        idx = PKV.PrefixIndex(4, salt="s")
+        assert len(idx.chain_hashes([1, 2, 3])) == 0
+        assert len(idx.chain_hashes([1, 2, 3, 4])) == 1
+        assert len(idx.chain_hashes(list(range(11)))) == 2
+
+    def test_chain_binds_whole_prefix(self):
+        """Block 1's hash differs when block 0's tokens differ — a match
+        can never skip a mismatched earlier block."""
+        idx = PKV.PrefixIndex(2, salt="s")
+        h_ab = idx.chain_hashes([1, 2, 3, 4])
+        h_cb = idx.chain_hashes([9, 9, 3, 4])
+        assert h_ab[0] != h_cb[0] and h_ab[1] != h_cb[1]
+
+    def test_salt_separates_configurations(self):
+        """Same tokens under different format/layer salts never collide."""
+        a = PKV.PrefixIndex(2, salt="kv8|L4")
+        b = PKV.PrefixIndex(2, salt="kv4|L4")
+        assert a.chain_hashes([1, 2]) != b.chain_hashes([1, 2])
+
+    def test_match_walks_chain_and_stops_at_miss(self):
+        idx = PKV.PrefixIndex(2, salt="s")
+        h = idx.chain_hashes([1, 2, 3, 4, 5, 6])
+        assert idx.register(h[0], 10) and idx.register(h[2], 12)
+        # h[1] missing: match must stop after the first block even though
+        # a deeper chain entry exists
+        assert idx.match([1, 2, 3, 4, 5, 6]) == [10]
+        assert idx.register(h[1], 11)
+        assert idx.match([1, 2, 3, 4, 5, 6]) == [10, 11, 12]
+        assert idx.match([1, 2, 9, 9]) == [10]     # diverging tokens
+
+    def test_register_first_writer_wins(self):
+        idx = PKV.PrefixIndex(2, salt="s")
+        [h] = idx.chain_hashes([1, 2])
+        assert idx.register(h, 5)
+        assert not idx.register(h, 6)              # duplicate stays private
+        assert idx.match([1, 2]) == [5]
+        [h2] = idx.chain_hashes([3, 4])
+        assert not idx.register(h2, 5)             # block already published
+
+    def test_drop_block_idempotent(self):
+        idx = PKV.PrefixIndex(2, salt="s")
+        [h] = idx.chain_hashes([1, 2])
+        idx.register(h, 5)
+        idx.drop_block(5)
+        assert idx.match([1, 2]) == [] and len(idx) == 0
+        idx.drop_block(5)                          # no-op, no raise
+
+    def test_allocator_eviction_drops_index_entry(self):
+        """End-to-end retention loop: register → free to CACHED →
+        eviction under pressure unpublishes the hash."""
+        idx = PKV.PrefixIndex(2, salt="s")
+        a = PKV.BlockAllocator(2, on_evict=idx.drop_block)
+        [b] = a.alloc(1)
+        [h] = idx.chain_hashes([1, 2])
+        idx.register(h, b)
+        a.set_cacheable(b)
+        a.free([b])
+        assert idx.match([1, 2]) == [b]
+        a.alloc(2)                                 # forces eviction of b
+        assert idx.match([1, 2]) == []
+
+
+# ---------------------------------------------------------------------------
+# COW block copy + slot gather (device halves of prefix sharing)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["kv8", "kv4"])
+def test_copy_block_bitwise(key, fmt):
+    """copy_block duplicates one pool block's bytes exactly and leaves
+    every other block untouched."""
+    spec, _, paged = _paired_caches(fmt, B=2, H=2, D=16, bs=4, max_seq=16)
+    k = jax.random.normal(key, (2, 6, 2, 16), jnp.float32) \
+        .astype(jnp.bfloat16)
+    paged = PKV.append_paged(paged, k, -k, jnp.zeros((2,), jnp.int32), spec)
+    src = int(paged.block_table[0, 0])
+    dst = int(paged.block_table[1, 3])             # unwritten block
+    out = PKV.copy_block(paged, jnp.int32(src), jnp.int32(dst))
+    for leaf in ("k", "v", "k_scale", "v_scale"):
+        a = np.asarray(getattr(paged, leaf))
+        b = np.asarray(getattr(out, leaf))
+        np.testing.assert_array_equal(b[dst], a[src], err_msg=leaf)
+        mask = np.ones(a.shape[0], bool)
+        mask[dst] = False
+        np.testing.assert_array_equal(b[mask], a[mask], err_msg=leaf)
+
+
+def test_gather_slot_matches_gather_view(key):
+    """gather_slot is exactly one row of gather_view (pure byte copy)."""
+    spec, _, paged = _paired_caches("kv8", B=3, H=2, D=16, bs=4, max_seq=16)
+    k = jax.random.normal(key, (3, 9, 2, 16), jnp.float32) \
+        .astype(jnp.bfloat16)
+    paged = PKV.append_paged(paged, k, -k, jnp.zeros((3,), jnp.int32), spec)
+    full = PKV.gather_view(paged, 8)
+    one = PKV.gather_slot(paged, jnp.int32(1), 8)
+    for leaf in ("k", "v", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(one, leaf)[0]),
+            np.asarray(getattr(full, leaf)[1]), err_msg=leaf)
+
+
+# ---------------------------------------------------------------------------
 # Paged vs dense equivalence (per-format, ragged positions)
 # ---------------------------------------------------------------------------
 
@@ -156,6 +359,31 @@ def test_scatter_slot_matches_dense_splice(key, fmt):
     np.testing.assert_array_equal(np.asarray(view.v_scale[1, :6]),
                                   np.asarray(stage.v_scale[0, :6]))
     assert int(view.length[1]) == 6
+
+
+def test_scatter_slot_start_skips_prefix(key):
+    """``scatter_slot(start=k)`` drops positions below ``k`` (the prefix
+    a cache hit already holds in shared blocks) and still lands the tail
+    bit-identically."""
+    spec = _spec("kv8")
+    S, H, D, bs = 8, 2, 16, 4
+    stage = KV.init_cache(1, S, H, D, spec)
+    k = jax.random.normal(key, (1, 8, H, D), jnp.float32) \
+        .astype(jnp.bfloat16)
+    stage = KV.append(stage, k, -k, jnp.int32(0), spec)
+
+    _, _, paged = _paired_caches("kv8", B=2, H=H, D=D, bs=bs, max_seq=S)
+    before = np.asarray(paged.k).copy()
+    out = PKV.scatter_slot(paged, stage, jnp.int32(1), start=jnp.int32(6))
+    view = PKV.gather_view(out)
+    # positions >= start landed …
+    np.testing.assert_array_equal(np.asarray(view.k[1, 6:8]),
+                                  np.asarray(stage.k[0, 6:8]))
+    # … while the slot's first block (positions < start live there) kept
+    # its prior pool bytes — no write traffic below the frontier
+    first_block = int(out.block_table[1, 0])
+    np.testing.assert_array_equal(np.asarray(out.k)[first_block],
+                                  before[first_block])
 
 
 def test_unmapped_writes_dropped(key):

@@ -13,6 +13,10 @@
 #                    BENCH_prefix_sharing_smoke.json (the committed
 #                    full-run BENCH_prefix_sharing.json is untouched)
 #                    and asserts sharing-on/off greedy streams identical
+#   make bench-preempt CI-sized block-growth/preemption benchmark;
+#                    writes BENCH_preemption_smoke.json and asserts
+#                    growth-on/off greedy streams identical + a strict
+#                    admitted-concurrency gain
 #
 # BENCH_*_smoke.json artifacts are gitignored — smoke runs never dirty
 # the tree; the committed BENCH_*.json files come from full runs.
@@ -20,7 +24,8 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench bench-paged bench-smoke bench-prefix
+.PHONY: test test-fast lint bench bench-paged bench-smoke bench-prefix \
+    bench-preempt
 
 test:
 	$(PY) -m pytest -x -q
@@ -43,3 +48,6 @@ bench-smoke:
 
 bench-prefix:
 	$(PY) -m benchmarks.prefix_sharing --smoke
+
+bench-preempt:
+	$(PY) -m benchmarks.preemption --smoke

@@ -1,0 +1,150 @@
+"""On-demand block growth vs worst-case reservation on an over-committed
+pool (DESIGN.md §5.3).
+
+The workload growth exists for: requests *declare* a large
+``max_new_tokens`` (the worst case an operator must honor) but actually
+finish on ``eos`` long before it — the regime ROADMAP calls out, where
+reservation-at-admission sets effective concurrency by a cap almost
+nobody reaches.  Each prompt's eos token is learned from a greedy probe
+run (streams are deterministic), so the "short finish" is exact and
+identical for both engines.  The same trace is then served through two
+otherwise-identical paged engines over a pool sized far below the
+aggregate worst case, reporting per configuration:
+
+* ``peak_running`` — admitted-concurrency high-water mark (the headline:
+  reservation is capped at ``pool / worst_case_blocks`` while growth
+  admits on prompt blocks),
+* ``peak_blocks_live`` — allocator occupancy watermark,
+* ``preemptions`` — total evictions (growth only; 0 when the actual
+  usage fits, which is the point of the eos-early workload),
+* ``ttft_p50`` / ``ttft_p90``, ``wall_s``, ``tokens_per_s`` — the
+  queueing-delay and throughput effect of admitting earlier
+  (CPU-relative; same caveats as benchmarks/paged_vs_dense.py).
+
+Greedy streams are asserted identical between the two engines — growth
+must be a pure admission/accounting change.
+
+    PYTHONPATH=src python -m benchmarks.preemption           # full
+    PYTHONPATH=src python -m benchmarks.preemption --smoke   # CI
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.engine import percentile_stats
+
+from .common import Reporter
+
+ARCH = "smollm-360m"
+POLICY = "w4a16kv8"
+BLOCK = 8
+
+
+def _workload(n_req: int, prompt_len: int, vocab: int):
+    """Distinct fixed-length prompts (no shared prefixes — this bench
+    isolates the admission effect from prefix caching)."""
+    rng = np.random.default_rng(11)
+    return [rng.integers(1, vocab, prompt_len).tolist()
+            for _ in range(n_req)]
+
+
+def _engine(growth: bool, slots: int, max_seq: int, n_blocks):
+    cfg = get_reduced(ARCH)
+    return Engine(EngineConfig(
+        model=cfg, policy=POLICY, n_slots=slots, max_seq=max_seq,
+        max_prompt=max_seq, seed=0, cache_kind="paged", block_size=BLOCK,
+        prefill_chunk=BLOCK, n_blocks=n_blocks,
+        enable_block_growth=growth))
+
+
+def _probe_eos(prompts, slots: int, max_seq: int, finish_at: int):
+    """Greedy-probe each prompt and return the token at output position
+    ``finish_at - 1``: declaring it as ``eos_id`` makes the measured
+    request finish after at most ``finish_at`` tokens, deterministically
+    and identically on every engine (greedy streams are
+    byte-reproducible)."""
+    eng = _engine(False, slots, max_seq, None)      # ample default pool
+    outs = eng.generate(prompts,
+                        SamplingParams(max_new_tokens=finish_at))
+    return [o.output_token_ids[-1] for o in outs]
+
+
+def _serve(prompts, eos_ids, growth: bool, slots: int, max_seq: int,
+           n_blocks: int, max_new: int):
+    """Serve the trace; returns (metrics row, per-request streams)."""
+    eng = _engine(growth, slots, max_seq, n_blocks)
+    # warm-up off the clock: compile prefill/decode graphs on tokens
+    # disjoint from the workload
+    cfg = get_reduced(ARCH)
+    eng.submit([cfg.vocab - 1] * len(prompts[0]),
+               SamplingParams(max_new_tokens=2))
+    eng.run_until_idle()
+    rids = [eng.submit(p, SamplingParams(max_new_tokens=max_new,
+                                         eos_id=e))
+            for p, e in zip(prompts, eos_ids)]
+    peak_running = 0
+    toks = 0
+    final = {}
+    t0 = eng.now()
+    while not eng.scheduler.idle:
+        outs = eng.step()
+        toks += len(outs)
+        peak_running = max(peak_running, len(eng.scheduler.running()))
+        final.update({o.rid: o for o in outs if o.finished})
+    wall = eng.now() - t0
+    outs = [final[r] for r in rids]
+    assert eng.allocator.free_count == eng.n_blocks, "blocks leaked"
+    ttft = percentile_stats([o.ttft for o in outs])
+    return {"peak_running": peak_running,
+            "peak_blocks_live": eng.allocator.peak_live,
+            "preemptions": sum(o.num_preemptions for o in outs),
+            "ttft_p50": ttft["p50"], "ttft_p90": ttft["p90"],
+            "tokens_per_s": toks / wall, "wall_s": wall}, \
+        [o.output_token_ids for o in outs]
+
+
+def run(reporter=None, smoke: bool = False) -> Reporter:
+    r = reporter or Reporter("preemption")
+    cfg = get_reduced(ARCH)
+    # (n_req, prompt_len, slots, max_seq, n_blocks, max_new, finish_at):
+    # worst case per request is blocks(prompt-1+max_new) but requests
+    # eos out after finish_at tokens.  The first full case sizes the
+    # pool *below* even the actual usage, so growth must preempt and
+    # recover (still byte-identical); the second sizes it to actual
+    # usage, the no-preemption sweet spot.
+    cases = [(6, 8, 6, 64, 12, 40, 6)] if smoke else \
+        [(8, 8, 8, 64, 12, 40, 6), (12, 16, 12, 128, 36, 96, 8)]
+    for n_req, plen, slots, max_seq, n_blocks, max_new, fin in cases:
+        prompts = _workload(n_req, plen, cfg.vocab)
+        eos_ids = _probe_eos(prompts, slots, max_seq, fin)
+        base, stream_base = _serve(prompts, eos_ids, False, slots,
+                                   max_seq, n_blocks, max_new)
+        grown, stream_grown = _serve(prompts, eos_ids, True, slots,
+                                     max_seq, n_blocks, max_new)
+        assert stream_grown == stream_base, \
+            "block growth changed greedy streams"
+        assert grown["peak_running"] > base["peak_running"], \
+            "growth did not raise admitted concurrency"
+        tag = f"req{n_req}_pool{n_blocks}"
+        r.add(f"{tag}_reserve", base["wall_s"], **base)
+        r.add(f"{tag}_growth", grown["wall_s"], **grown,
+              concurrency_gain=grown["peak_running"]
+              / base["peak_running"],
+              ttft_p50_speedup=base["ttft_p50"] / grown["ttft_p50"])
+    return r
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; writes BENCH_preemption_smoke"
+                         ".json instead of the committed artifact")
+    args = ap.parse_args()
+    rep = run(smoke=args.smoke)
+    rep.print_csv()
+    path = ("BENCH_preemption_smoke.json" if args.smoke
+            else "BENCH_preemption.json")
+    print(f"\nwrote {rep.write_json(path)}")

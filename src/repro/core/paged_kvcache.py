@@ -150,6 +150,7 @@ class BlockAllocator:
         self._ref: Dict[int, int] = {}
         self._cacheable: set = set()
         self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self._peak_live: int = 0
 
     @property
     def free_count(self) -> int:
@@ -165,6 +166,15 @@ class BlockAllocator:
     def live_count(self) -> int:
         """Blocks with refcount >= 1 (mapped into at least one table)."""
         return len(self._ref)
+
+    @property
+    def peak_live(self) -> int:
+        """High-water mark of :attr:`live_count` since construction /
+        :meth:`reset` — the pool occupancy a sized-down deployment would
+        have needed.  The growth benchmarks report this watermark
+        instead of sampling ``live_count`` between engine steps (a
+        sample can miss the transient peak inside one admission pass)."""
+        return self._peak_live
 
     @property
     def available(self) -> int:
@@ -202,6 +212,7 @@ class BlockAllocator:
                     self.on_evict(b)
             self._ref[b] = 1
             blocks.append(b)
+        self._peak_live = max(self._peak_live, len(self._ref))
         return blocks
 
     def share(self, block: int) -> None:
@@ -213,6 +224,7 @@ class BlockAllocator:
         elif block in self._cached:
             del self._cached[block]
             self._ref[block] = 1
+            self._peak_live = max(self._peak_live, len(self._ref))
         else:
             raise ValueError(
                 f"block {block} is neither live nor cached (share of a "

@@ -61,6 +61,10 @@ def main(argv=None) -> int:
     wall = eng.now() - t_start
     print(f"served {len(finished)} requests, {total_tokens} tokens "
           f"in {wall:.2f}s → {total_tokens / wall:.1f} tok/s")
+    if config.enable_block_growth:
+        print(f"preemptions: {sum(o.num_preemptions for o in finished)} "
+              f"(peak live blocks {eng.allocator.peak_live}"
+              f"/{eng.n_blocks})")
     print("TTFT percentiles (s):",
           {k: round(v, 3) for k, v in percentile_stats(
               [o.ttft for o in finished]).items()})

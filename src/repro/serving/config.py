@@ -55,6 +55,18 @@ class EngineConfig:
     flag on or off; ``RequestOutput.cached_tokens`` reports per-request
     hits.
 
+    Growth knobs (paged only): ``enable_block_growth`` switches
+    admission from worst-case *reservation* (the default: a request pins
+    ``prompt + max_new_tokens`` blocks up front and can never stall
+    mid-decode) to vLLM-style **on-demand growth** — admission reserves
+    only the prompt's blocks plus ``reserve_headroom_blocks``, decode
+    allocates one block lazily at each block-boundary crossing, and when
+    the pool is exhausted the engine preempts the youngest running
+    request (requeued at the front of the waiting queue, recovered
+    byte-exactly; DESIGN.md §5.3).  Effective concurrency rises because
+    requests that finish on ``eos`` before their cap never claim their
+    worst case; greedy streams are unchanged either way.
+
     ``attn_impl`` picks the decode-attention path for KV-transformer
     families: ``"kernel"`` (default) runs the Pallas flash-decode
     kernels — paged engines resolve block tables *in-kernel*, and dense
@@ -81,6 +93,8 @@ class EngineConfig:
     prefill_chunk: int = 32
     attn_impl: str = "kernel"
     enable_prefix_caching: bool = False
+    enable_block_growth: bool = False
+    reserve_headroom_blocks: int = 0
 
     def __post_init__(self):
         """Validate and normalize the configuration (raises EngineError)."""
@@ -135,12 +149,36 @@ class EngineConfig:
                 raise EngineError(
                     "paged cache does not support modality-stub families "
                     "(their prefill consumes extra encoder inputs)")
-        elif self.enable_prefix_caching:
-            # prefix sharing maps one physical block into several block
-            # tables — only the paged backend has blocks to share
+        else:
+            if self.enable_prefix_caching:
+                # prefix sharing maps one physical block into several
+                # block tables — only the paged backend has blocks
+                raise EngineError(
+                    "enable_prefix_caching requires cache_kind='paged' "
+                    f"(got {self.cache_kind!r})")
+            if self.n_blocks is not None:
+                # a dense slab has no pool: silently ignoring the knob
+                # would hand the caller n_slots*max_seq of KV while they
+                # believe they capped it at n_blocks*block_size
+                raise EngineError(
+                    "n_blocks requires cache_kind='paged' "
+                    f"(got {self.cache_kind!r}; the dense slab is sized "
+                    "by n_slots * max_seq)")
+            if self.enable_block_growth:
+                raise EngineError(
+                    "enable_block_growth requires cache_kind='paged' "
+                    f"(got {self.cache_kind!r})")
+
+        if not isinstance(self.reserve_headroom_blocks, int) \
+                or self.reserve_headroom_blocks < 0:
             raise EngineError(
-                "enable_prefix_caching requires cache_kind='paged' "
-                f"(got {self.cache_kind!r})")
+                "reserve_headroom_blocks must be a non-negative int, "
+                f"got {self.reserve_headroom_blocks!r}")
+        if self.reserve_headroom_blocks and not self.enable_block_growth:
+            # same silent-ignore trap as n_blocks-with-dense: headroom
+            # only shapes admission in growth mode
+            raise EngineError(
+                "reserve_headroom_blocks requires enable_block_growth")
 
     # -- derived capacity --------------------------------------------------
 
@@ -167,7 +205,8 @@ class EngineConfig:
         d = dict(arch="smollm-360m", policy="w4a16kv8", slots=4,
                  max_seq=256, max_prompt=None, seed=0, cache_kind="dense",
                  block_size=16, n_blocks=None, prefill_chunk=32,
-                 attn_impl="kernel", enable_prefix_caching=False)
+                 attn_impl="kernel", enable_prefix_caching=False,
+                 enable_block_growth=False, reserve_headroom_blocks=0)
         d.update(defaults)
         ap.add_argument("--arch", default=d["arch"])
         ap.add_argument("--reduced", action="store_true", default=True)
@@ -199,6 +238,17 @@ class EngineConfig:
                         help="share full prompt-prefix KV blocks across "
                              "requests (paged backend only; "
                              "copy-on-write, byte-identical streams)")
+        ap.add_argument("--enable-block-growth", action="store_true",
+                        default=d["enable_block_growth"],
+                        help="reserve only prompt blocks at admission "
+                             "and grow on demand, preempting the "
+                             "youngest request when the pool runs dry "
+                             "(paged backend only; byte-exact recovery)")
+        ap.add_argument("--reserve-headroom-blocks", type=int,
+                        default=d["reserve_headroom_blocks"],
+                        help="extra blocks reserved per request at "
+                             "admission in growth mode (softens early "
+                             "preemption churn)")
         return ap
 
     @classmethod
@@ -221,4 +271,6 @@ class EngineConfig:
                    block_size=args.block_size, n_blocks=args.n_blocks,
                    prefill_chunk=args.prefill_chunk,
                    attn_impl=args.attn_impl,
-                   enable_prefix_caching=args.enable_prefix_caching)
+                   enable_prefix_caching=args.enable_prefix_caching,
+                   enable_block_growth=args.enable_block_growth,
+                   reserve_headroom_blocks=args.reserve_headroom_blocks)

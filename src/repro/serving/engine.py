@@ -27,7 +27,17 @@ backends:
   and a host-side :class:`BlockAllocator`.  Admission is gated on free
   blocks (the scheduler's ``admit_gate``) and a request's blocks are
   reclaimed when it retires, so resident KV memory scales with *live
-  context*, not ``n_slots × max_seq``.  With
+  context*, not ``n_slots × max_seq``.  By default admission *reserves*
+  the worst case (``prompt + max_new_tokens`` blocks) so a running
+  request can never stall; with ``enable_block_growth`` it reserves
+  only the prompt's blocks (+ ``reserve_headroom_blocks``), ``step()``
+  allocates one block lazily whenever a slot's next append crosses a
+  block boundary, and pool exhaustion preempts the youngest running
+  request — its blocks are freed, it requeues at the *front* of the
+  waiting queue (``Status.PREEMPTED``), and on re-admission its prompt
+  is re-prefilled and its already-produced tokens are *replayed*
+  through the ordinary decode path (each forced instead of sampled), so
+  recovery is byte-exact (DESIGN.md §5.3).  With
   ``enable_prefix_caching``, full prompt blocks are additionally
   published in a content-addressed :class:`PrefixIndex`; a new request
   whose prompt matches a cached chain maps the *same physical blocks*
@@ -162,6 +172,9 @@ class Engine:
         self._has_extra = bool(self._extra)
 
         self._paged = config.cache_kind == "paged"
+        #: on-demand growth + preemption (paged only; EngineConfig
+        #: rejects the flag on dense backends)
+        self._growth = self._paged and config.enable_block_growth
         self.prefix_index: Optional[PKV.PrefixIndex] = None
         if self._paged:
             # family/shape feasibility was validated by EngineConfig
@@ -290,7 +303,10 @@ class Engine:
                       seed=self._resolve_seed(params, self._next_rid))
         if self._paged and self._blocks_for(req) > self.n_blocks:
             # infeasible even with the whole pool free: reject now rather
-            # than deadlock the FCFS queue behind an unadmittable head
+            # than deadlock the FCFS queue behind an unadmittable head.
+            # The growth engine keeps this *worst-case* check too: a
+            # request that outgrows the whole pool would preempt every
+            # sibling and then livelock alone at the queue head
             raise EngineError(
                 f"request needs {self._blocks_for(req)} KV blocks "
                 f"(prompt {len(req.prompt)} + max_new "
@@ -310,12 +326,13 @@ class Engine:
         req = self._requests.get(rid)
         if req is None:
             return None
-        if req.status == Status.WAITING:
+        if req.status in (Status.WAITING, Status.PREEMPTED):
             self.scheduler.remove_waiting(req)
             req.status = Status.FINISHED
             req.finish_time = self.now()
             # paged: waiting requests hold no blocks (reservation happens
-            # at admission), so there is nothing to reclaim
+            # at admission) and preempted requests already released
+            # theirs, so there is nothing to reclaim
         else:
             self.scheduler.finish(req, self.now())
             if self._paged:
@@ -340,11 +357,27 @@ class Engine:
     def _blocks_for(self, req: Request) -> int:
         """Worst-case KV blocks for a request: prompt minus the last token
         (re-decoded) plus every potential output token, clipped to the
-        context limit.  Reserved at admission so a running request can
-        never stall mid-decode for want of a block (no preemption)."""
+        context limit.  In reservation mode (the default) this is pinned
+        whole at admission so a running request can never stall
+        mid-decode for want of a block; in growth mode it is only the
+        feasibility ceiling (``submit`` rejection / headroom clip)."""
         toks = min(len(req.prompt) - 1 + req.params.max_new_tokens,
                    self.max_seq)
         return PKV.blocks_needed(max(toks, 1), self.block_size)
+
+    def _admission_blocks(self, req: Request) -> int:
+        """Blocks pinned at admission.  Reservation mode: the worst case
+        (:meth:`_blocks_for`).  Growth mode: just the *effective*
+        sequence — prompt plus any tokens already produced before a
+        preemption (the replay rewrites their KV) plus one position for
+        the first decode append — padded by ``reserve_headroom_blocks``
+        and never more than the worst case."""
+        if not self._growth:
+            return self._blocks_for(req)
+        eff = min(len(req.prompt) + len(req.output), self.max_seq)
+        need = PKV.blocks_needed(max(eff, 1), self.block_size)
+        return min(need + self.config.reserve_headroom_blocks,
+                   self._blocks_for(req))
 
     def _match_prefix(self, req: Request):
         """Longest cached block chain matching the request's prompt.
@@ -375,8 +408,12 @@ class Engine:
         allocated — a prefix hit admits where a cold request would have
         been deferred.  The COW source is pinned (shared) until
         ``_do_prefill`` finishes the copy, so a sibling admission's
-        eviction can never race it away."""
-        need = self._blocks_for(req)
+        eviction can never race it away.
+
+        In growth mode the reservation covers only the effective
+        sequence plus headroom (:meth:`_admission_blocks`) — decode
+        grows the mapping block by block (:meth:`_grow_for_step`)."""
+        need = self._admission_blocks(req)
         shared, cow_src = self._match_prefix(req)
         pinned = shared + ([cow_src] if cow_src is not None else [])
         for b in pinned:
@@ -440,6 +477,44 @@ class Engine:
         allocator's CACHED LRU for future prefix hits."""
         self.allocator.free(self._block_map.pop(req.rid))
         self._map_slot_blocks(req.slot, [])   # sentinel row: writes dropped
+
+    def _preempt(self, req: Request) -> None:
+        """Evict a running request to recover pool blocks (growth mode).
+
+        Its block references are released (shared blocks stay live for
+        their other holders; index-published blocks park on the CACHED
+        LRU — which is what lets prefix caching soften the recompute),
+        its slot frees, and it requeues at the *front* of the waiting
+        queue as ``Status.PREEMPTED``.  Its produced tokens are kept:
+        re-admission re-prefills the prompt and replays them byte-exactly
+        (see ``_do_prefill`` / ``step``)."""
+        req.num_preemptions += 1
+        self._reclaim(req)            # while req.slot is still valid
+        self.scheduler.preempt(req)
+
+    def _grow_for_step(self, running: List[Request]) -> List[Request]:
+        """Growth-mode pre-decode pass: make sure every running slot's
+        next append (position ``req.pos``) lands in a mapped block.
+
+        Walks the batch oldest-first (rid order) and allocates one block
+        per boundary crossing.  When the pool cannot cover a block —
+        FREE and evictable CACHED both exhausted — the *youngest*
+        running request is preempted (possibly the requester itself:
+        self-preemption is the vLLM recompute discipline) until the
+        allocation fits.  Oldest-first growth + youngest-first eviction
+        makes priority acyclic, so the oldest request always progresses
+        and the loop terminates.  Returns the surviving running set."""
+        bs = self.block_size
+        for req in sorted(running, key=lambda r: r.rid):
+            while (req.status == Status.RUNNING
+                   and req.pos >= len(self._block_map[req.rid]) * bs):
+                if self.allocator.can_alloc(1):
+                    blocks = self._block_map[req.rid]
+                    blocks.extend(self.allocator.alloc(1))
+                    self._map_slot_blocks(req.slot, blocks)
+                else:
+                    self._preempt(self.scheduler.victim())
+        return self.scheduler.running()
 
     def _live_bucket(self, running) -> int:
         """Static live-context bound for the paged decode kernel: the
@@ -548,6 +623,12 @@ class Engine:
         self.positions = self.positions.at[req.slot].set(n - 1)
         self.last_tokens = self.last_tokens.at[req.slot, 0].set(
             req.prompt[-1])
+        # preemption recovery: tokens produced before the eviction are
+        # *replayed* through the ordinary decode path (forced, not
+        # sampled) so their KV is rewritten by the exact kernels and
+        # inputs of the original run — byte-exact recompute.  Empty for
+        # fresh requests.
+        req.replay = list(req.output)
 
     # -- main loop ---------------------------------------------------------
 
@@ -556,13 +637,17 @@ class Engine:
         host-side position mirror — no device sync).
 
         The context-limit guard (``pos < max_seq - 1``) is shared by both
-        backends; paged slots additionally require the next write to land
-        inside the blocks reserved at admission — by construction that
-        never binds before ``max_new_tokens`` does, so the two backends
-        retire requests on identical iterations."""
+        backends; paged slots in *reservation* mode additionally require
+        the next write to land inside the blocks reserved at admission —
+        by construction that never binds before ``max_new_tokens`` does,
+        so the two backends retire requests on identical iterations.  In
+        *growth* mode the mapping extends on demand, so room is bounded
+        by ``max_seq`` / ``blocks_per_slot`` alone (the first guard:
+        ``max_seq == blocks_per_slot * block_size`` for paged configs) —
+        never by the current reservation."""
         if req.pos >= self.max_seq - 1:
             return False
-        if self._paged:
+        if self._paged and not self._growth:
             cap = len(self._block_map[req.rid]) * self.block_size
             return req.pos < cap
         return True
@@ -588,11 +673,21 @@ class Engine:
 
         Returns one :class:`RequestOutput` per running request — a delta
         of exactly one new token plus the cumulative output; finished
-        requests carry ``finish_reason`` and final timing metrics."""
+        requests carry ``finish_reason`` and final timing metrics.
+        Growth mode may additionally grow/preempt before the decode
+        (preempted requests emit nothing until recovered), and slots
+        replaying after a preemption emit nothing (their tokens were
+        already streamed)."""
         self.iteration += 1
         for req in self.scheduler.admit():
             self._do_prefill(req)
         running = self.scheduler.running()
+        if self._growth and running:
+            # lazy growth (and any preemption it forces) runs *before*
+            # the batched decode, so every surviving slot's next append
+            # lands in a mapped block — sentinel-dropped writes would
+            # silently corrupt the new token's own attention read
+            running = self._grow_for_step(running)
         if not running:
             return []
 
@@ -616,12 +711,34 @@ class Engine:
                                        self.cache, self.positions, seeds,
                                        steps, temp, top_k,
                                        max_live=max_live)
-        self.positions = self.positions + 1
-        self.last_tokens = nxt[:, None]
-        t = self.now()
-        nxt_host = jax.device_get(nxt)
-        outputs: List[RequestOutput] = []
+        # only slots that decoded this iteration advance their device
+        # position — unoccupied slots stay frozen.  (Incrementing every
+        # slot unconditionally let idle slots drift without bound: a
+        # long-lived engine kept writing clamped garbage with
+        # ever-growing RoPE positions and would eventually overflow
+        # int32.)
+        inc = np.zeros((self.n_slots,), np.int32)
         for r in running:
+            inc[r.slot] = 1
+        self.positions = self.positions + jnp.asarray(inc)
+        t = self.now()
+        nxt_host = np.asarray(jax.device_get(nxt))
+        if any(r.replay for r in running):
+            nxt_host = nxt_host.copy()          # device_get may be RO
+        outputs: List[RequestOutput] = []
+        forced = False
+        for r in running:
+            if r.replay:
+                # preemption recovery: this position's token is already
+                # known (and was already streamed) — force it as the
+                # slot's next input instead of the sampled value and
+                # emit nothing.  The decode above rewrote its KV through
+                # the exact kernels/inputs of the original run, so the
+                # stream stays byte-identical once replay drains.
+                nxt_host[r.slot] = r.replay.pop(0)
+                r.pos += 1
+                forced = True
+                continue
             tok = int(nxt_host[r.slot])
             if r.first_token_time is None:
                 r.first_token_time = t
@@ -638,6 +755,8 @@ class Engine:
             outputs.append(out)
             if r.rid in self._stream_bufs:
                 self._stream_bufs[r.rid].append(out)
+        self.last_tokens = (jnp.asarray(nxt_host)[:, None] if forced
+                            else nxt[:, None])
         return outputs
 
     def generate(self, prompts: Sequence[Sequence[int]],
@@ -691,7 +810,10 @@ class Engine:
         directly-submitted requests land in the unclaimed buffer — see
         :meth:`run_until_idle`.  If the request is ``abort()``-ed
         mid-stream the iterator simply ends (the abort caller got the
-        final output)."""
+        final output).  An *abandoned* iterator (the caller breaks out /
+        drops it, closing the generator) aborts its own request, so the
+        slot and its KV blocks return to the pool immediately instead of
+        leaking until some other driver happens to drain it."""
         rid = self.submit(prompt, params)
         buf = self._stream_bufs.setdefault(rid, [])
         try:
@@ -708,6 +830,13 @@ class Engine:
                             and out.rid != rid:
                         self._unclaimed.append(out)
             raise RuntimeError("stream() did not finish")
+        except GeneratorExit:
+            # caller closed the iterator mid-stream: without this the
+            # request would stay RUNNING, holding its slot and blocks
+            # forever.  abort() is idempotent — a no-op if the request
+            # already finished between the last yield and the close.
+            self.abort(rid)
+            raise
         finally:
             self._stream_bufs.pop(rid, None)
 

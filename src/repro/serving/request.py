@@ -19,6 +19,10 @@ class Status(enum.Enum):
 
     WAITING = "waiting"
     RUNNING = "running"
+    #: evicted mid-decode by the block-growth engine (pool exhausted);
+    #: the request sits at the *front* of the waiting queue, holds no
+    #: blocks, and will be re-prefilled + replayed when space frees up
+    PREEMPTED = "preempted"
     FINISHED = "finished"
 
 
@@ -94,7 +98,11 @@ class RequestOutput:
     carry the request's final metrics.  ``cached_tokens`` counts the
     prompt tokens whose KV was served from the prefix cache instead of
     being recomputed (always 0 unless the engine runs with
-    ``enable_prefix_caching``).
+    ``enable_prefix_caching``).  ``num_preemptions`` counts how many
+    times the request was evicted and recovered by the block-growth
+    engine (always 0 unless ``enable_block_growth``); the token stream
+    is unaffected — preemption recovery is byte-exact — but latency is
+    not, so the count is surfaced for observability.
     """
 
     rid: int
@@ -104,6 +112,7 @@ class RequestOutput:
     finished: bool = False
     finish_reason: Optional[FinishReason] = None
     cached_tokens: int = 0
+    num_preemptions: int = 0
 
     # final metrics (populated on the finished output) -------------------
     ttft: Optional[float] = None        # first-token latency (s)
@@ -142,6 +151,14 @@ class Request:
     #: chain hashes of the prompt's full blocks, computed once at the
     #: admission gate and reused for registration (engine-internal)
     prefix_hashes: List[bytes] = dataclasses.field(default_factory=list)
+    #: times this request was preempted by the block-growth engine
+    num_preemptions: int = 0
+    #: already-produced tokens still to be *replayed* through the decode
+    #: path after a preemption re-admission: the engine forces each one
+    #: as the slot's next token instead of sampling, so the recomputed
+    #: KV is written by the exact same kernels/inputs as the original
+    #: run (byte-exact recovery; engine-internal)
+    replay: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -171,5 +188,6 @@ class Request:
             output_token_ids=list(self.output),
             finished=done, finish_reason=self.finish_reason if done else None,
             cached_tokens=self.cached_tokens,
+            num_preemptions=self.num_preemptions,
             ttft=self.ttft if done else None,
             latency=self.latency if done else None)

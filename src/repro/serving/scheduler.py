@@ -12,6 +12,15 @@ block allocator cover this request's worst-case context?"); admission
 stays strictly FCFS — if the queue head doesn't fit, younger requests do
 not jump it (no starvation), they wait for blocks reclaimed when running
 requests retire.
+
+With on-demand block growth (``EngineConfig.enable_block_growth``) the
+scheduler additionally supports *preemption*: when the pool runs dry
+mid-decode the engine evicts the **youngest** running request
+(:meth:`Scheduler.victim` — rids are submission-ordered, so the oldest
+request always keeps making progress and the priority order is acyclic:
+no thrashing, no livelock) and :meth:`Scheduler.preempt` requeues it at
+the *front* of the waiting queue so it retains its FCFS position
+(DESIGN.md §5.3).
 """
 from __future__ import annotations
 
@@ -82,6 +91,30 @@ class Scheduler:
     def running(self) -> List[Request]:
         """Requests currently occupying slots, in slot order."""
         return [r for r in self.slots if r is not None]
+
+    def victim(self) -> Optional[Request]:
+        """Preemption victim: the *youngest* running request (highest
+        rid — rids are monotone in submission order, and a preempted
+        request keeps its rid, so age survives re-admission).  Evicting
+        youngest-first preserves FCFS priority: the oldest running
+        request is never preempted while a younger one holds blocks,
+        which is what guarantees forward progress under contention.
+        Returns None when nothing is running."""
+        running = self.running()
+        if not running:
+            return None
+        return max(running, key=lambda r: r.rid)
+
+    def preempt(self, req: Request) -> None:
+        """Evict a running request: free its slot and requeue it at the
+        **front** of the waiting queue in ``Status.PREEMPTED`` (it keeps
+        its FCFS position and re-admits before anything younger).  Block
+        reclamation is the engine's job (it owns the allocator) and must
+        happen *before* this call while ``req.slot`` is still valid."""
+        req.status = Status.PREEMPTED
+        self.slots[req.slot] = None
+        req.slot = -1
+        self.waiting.appendleft(req)
 
     def finish(self, req: Request, t: float) -> None:
         """Retire a running request at time ``t`` and free its slot."""

@@ -88,6 +88,43 @@ class TestEngineConfigValidation:
                              cache_kind="paged", block_size=16, n_blocks=6)
         assert tight.pool_blocks == 6
 
+    def test_dense_rejects_n_blocks(self):
+        """`n_blocks` with a dense slab was silently ignored — the caller
+        believed the KV store was capped at n_blocks*block_size while it
+        actually allocated n_slots*max_seq.  Cross-field rejection, same
+        as the enable_prefix_caching dense check."""
+        with pytest.raises(EngineError, match="n_blocks requires"):
+            EngineConfig(model=SMOLLM, cache_kind="dense", n_blocks=8)
+        # explicit None (the default) stays valid on dense
+        EngineConfig(model=SMOLLM, cache_kind="dense", n_blocks=None)
+
+    def test_growth_knob_validation(self):
+        with pytest.raises(EngineError, match="enable_block_growth"):
+            EngineConfig(model=SMOLLM, cache_kind="dense",
+                         enable_block_growth=True)
+        with pytest.raises(EngineError, match="reserve_headroom_blocks"):
+            EngineConfig(model=SMOLLM, cache_kind="paged", max_seq=64,
+                         block_size=16, reserve_headroom_blocks=2)
+        with pytest.raises(EngineError, match="non-negative"):
+            EngineConfig(model=SMOLLM, cache_kind="paged", max_seq=64,
+                         block_size=16, enable_block_growth=True,
+                         reserve_headroom_blocks=-1)
+        cfg = EngineConfig(model=SMOLLM, cache_kind="paged", max_seq=64,
+                           block_size=16, enable_block_growth=True,
+                           reserve_headroom_blocks=1)
+        assert cfg.enable_block_growth
+
+    def test_growth_cli_roundtrip(self):
+        ap = argparse.ArgumentParser()
+        EngineConfig.add_cli_args(ap)
+        args = ap.parse_args(["--cache-kind", "paged", "--max-seq", "64",
+                              "--block-size", "16",
+                              "--enable-block-growth",
+                              "--reserve-headroom-blocks", "2"])
+        cfg = EngineConfig.from_cli(args)
+        assert cfg.enable_block_growth
+        assert cfg.reserve_headroom_blocks == 2
+
     def test_from_cli_roundtrip(self):
         ap = argparse.ArgumentParser()
         EngineConfig.add_cli_args(ap)
@@ -248,6 +285,100 @@ class TestStreaming:
         frozen = list(first.output_token_ids)
         dense.run_until_idle()
         assert first.output_token_ids == frozen
+
+
+class TestAbandonedStream:
+    """An abandoned ``stream()`` iterator must abort its request —
+    regression: the ``finally`` only dropped the stream buffer, leaving
+    the request running and holding its slot/KV blocks forever."""
+
+    def _fresh(self):
+        return Engine(EngineConfig(
+            model=SMOLLM, policy="w4a16kv8", n_slots=3, max_seq=64,
+            max_prompt=16, cache_kind="paged", block_size=8,
+            prefill_chunk=4))
+
+    def test_break_frees_slot_and_blocks(self):
+        eng = self._fresh()
+        seen = 0
+        for out in eng.stream([5, 6, 7], SamplingParams(max_new_tokens=30)):
+            seen += 1
+            if seen == 3:
+                break                      # abandon mid-generation
+        assert eng.scheduler.idle          # slot freed, nothing waiting
+        assert eng.allocator.free_count == eng.n_blocks   # all reclaimed
+        assert not eng._requests and not eng._block_map
+        assert not eng._stream_bufs
+
+    def test_explicit_close_frees_slot_and_blocks(self):
+        eng = self._fresh()
+        it = eng.stream([5, 6, 7], SamplingParams(max_new_tokens=30))
+        next(it)
+        it.close()
+        assert eng.scheduler.idle
+        assert eng.allocator.free_count == eng.n_blocks
+        assert not eng._requests
+
+    def test_close_after_finish_is_noop(self):
+        """abort() inside the GeneratorExit handler is idempotent: a
+        stream consumed to completion then closed raises nothing and
+        double-frees nothing."""
+        eng = self._fresh()
+        toks = [t for out in eng.stream([5, 6], SamplingParams(
+            max_new_tokens=4)) for t in out.new_token_ids]
+        assert len(toks) == 4
+        it = eng.stream([5, 6], SamplingParams(max_new_tokens=4))
+        for _ in range(4):
+            next(it)
+        it.close()                          # request already finished
+        assert eng.allocator.free_count == eng.n_blocks
+
+    def test_abandoning_one_stream_leaves_siblings_running(self):
+        eng = self._fresh()
+        keep = eng.submit([9, 8, 7], SamplingParams(max_new_tokens=6))
+        for out in eng.stream([5, 6, 7], SamplingParams(max_new_tokens=30)):
+            break                          # abandon immediately
+        final = _drain(eng)
+        assert len(final[keep].output_token_ids) == 6
+
+
+class TestIdleSlotPositions:
+    """Unoccupied slots' device positions must stay frozen — regression:
+    ``step()`` incremented every slot's position unconditionally, so a
+    long-lived engine with idle slots drifted them without bound (toward
+    int32 overflow, with ever-growing RoPE positions on the garbage
+    writes)."""
+
+    def test_free_slot_position_bounded_and_streams_unchanged(self):
+        import jax
+        import numpy as np
+        eng = Engine(EngineConfig(
+            model=SMOLLM, policy="w4a16kv8", n_slots=3, max_seq=64,
+            max_prompt=16, cache_kind="paged", block_size=8,
+            prefill_chunk=4))
+        # one long request, two slots idle for all 40 iterations
+        rid = eng.submit([5, 6, 7], SamplingParams(max_new_tokens=40))
+        out = _drain(eng)[rid]
+        pos = np.asarray(jax.device_get(eng.positions))
+        occupied = {0}                     # FCFS: first free slot
+        for s in range(3):
+            if s not in occupied:
+                assert pos[s] == 0, f"idle slot {s} drifted to {pos[s]}"
+        # the drift fix must not perturb decode: a fresh engine with no
+        # idle iterations produces the same greedy stream
+        ref_eng = Engine(EngineConfig(
+            model=SMOLLM, policy="w4a16kv8", n_slots=1, max_seq=64,
+            max_prompt=16, cache_kind="paged", block_size=8,
+            prefill_chunk=4))
+        ref = ref_eng.generate([[5, 6, 7]],
+                               SamplingParams(max_new_tokens=40))[0]
+        assert out.output_token_ids == ref.output_token_ids
+        # a request admitted into a long-idle slot still decodes right
+        rid2 = eng.submit([9, 8, 7], SamplingParams(max_new_tokens=6))
+        out2 = _drain(eng)[rid2]
+        ref2 = ref_eng.generate([[9, 8, 7]],
+                                SamplingParams(max_new_tokens=6))[0]
+        assert out2.output_token_ids == ref2.output_token_ids
 
 
 class TestAbort:

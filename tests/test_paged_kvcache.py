@@ -185,6 +185,120 @@ class TestRefcounting:
         assert a.refcount(b) == 0
 
 
+class TestAllocatorChurn:
+    """Seeded random-interleaving sweep over the allocator lifecycle —
+    the op mix the growth engine produces (incremental grow, preemption
+    bursts freeing whole maps, prefix shares, cacheable parking, and
+    allocation-under-pressure eviction).  A shadow model tracks every
+    expected refcount; after every op the allocator's FREE/LIVE/CACHED
+    accounting must match the model *exactly*."""
+
+    N_BLOCKS = 24
+
+    def _check(self, a, ref, cached):
+        """Compare allocator counters/refcounts against the shadow."""
+        assert a.live_count == len(ref)
+        assert a.cached_count == len(cached)
+        assert a.free_count == self.N_BLOCKS - len(ref) - len(cached)
+        assert a.available == a.free_count + a.cached_count
+        assert set(ref) & cached == set()          # states are disjoint
+        for b, rc in ref.items():
+            assert a.refcount(b) == rc
+        for b in cached:
+            assert a.refcount(b) == 0
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_random_grow_free_preempt_evict_interleavings(self, seed):
+        rng = np.random.default_rng(seed)
+        evicted = []
+        a = PKV.BlockAllocator(self.N_BLOCKS, on_evict=evicted.append)
+        ref = {}                    # block -> expected refcount
+        cached = set()              # expected CACHED set
+        cacheable = set()           # marked set_cacheable while LIVE
+        maps = []                   # request-style block lists (grow/free)
+        peak = 0
+        for _ in range(400):
+            op = rng.choice(["admit", "grow", "share", "cacheable",
+                             "preempt", "pressure"])
+            if op == "admit" and a.can_alloc(2):
+                blks = a.alloc(2)   # prompt-sized admission
+                for b in blks:
+                    assert ref.get(b, 0) == 0, "double alloc of live"
+                    ref[b] = 1
+                    cached.discard(b)
+                    cacheable.discard(b)
+                maps.append(list(blks))
+            elif op == "grow" and maps and a.can_alloc(1):
+                m = maps[rng.integers(len(maps))]
+                [b] = a.alloc(1)    # one-block boundary crossing
+                assert ref.get(b, 0) == 0
+                ref[b] = 1
+                cached.discard(b)
+                cacheable.discard(b)
+                m.append(b)
+            elif op == "share" and maps:
+                # prefix hit: pin one mapped block into another map
+                m = maps[rng.integers(len(maps))]
+                b = m[rng.integers(len(m))]
+                a.share(b)
+                ref[b] += 1
+                maps.append([b])
+            elif op == "cacheable" and maps:
+                m = maps[rng.integers(len(maps))]
+                b = m[rng.integers(len(m))]
+                a.set_cacheable(b)
+                cacheable.add(b)
+            elif op == "preempt" and maps:
+                # preemption/retire: decref a whole map at once
+                m = maps.pop(rng.integers(len(maps)))
+                a.free(m)
+                for b in m:
+                    ref[b] -= 1
+                    if ref[b] == 0:
+                        del ref[b]
+                        if b in cacheable:
+                            cached.add(b)
+                        else:
+                            cacheable.discard(b)
+            elif op == "pressure":
+                # allocate everything allocatable: forces LRU eviction
+                # of every CACHED block, never touches LIVE ones
+                n = a.available
+                if n:
+                    before = set(cached)
+                    blks = a.alloc(n)
+                    for b in blks:
+                        assert ref.get(b, 0) == 0
+                        ref[b] = 1
+                    assert before <= set(blks)     # cached all recycled
+                    cached.clear()
+                    cacheable -= before
+                    maps.append(list(blks))
+            self._check(a, ref, cached)
+            peak = max(peak, len(ref))
+            assert a.peak_live >= len(ref)
+        assert a.peak_live == peak
+        # full teardown: every map released → pool returns to all-free
+        # (+ whatever parked CACHED), then pressure drains CACHED too
+        for m in maps:
+            a.free(m)
+            for b in m:
+                ref[b] -= 1
+                if ref[b] == 0:
+                    del ref[b]
+                    if b in cacheable:
+                        cached.add(b)
+                    else:
+                        cacheable.discard(b)
+        maps.clear()
+        self._check(a, ref, cached)
+        assert not ref
+        assert a.free_count + a.cached_count == self.N_BLOCKS
+        if a.available:
+            a.alloc(a.available)               # evicts all CACHED
+        assert a.live_count == self.N_BLOCKS   # exact accounting ✓
+
+
 class TestPrefixIndex:
     def test_chain_hashes_full_blocks_only(self):
         idx = PKV.PrefixIndex(4, salt="s")

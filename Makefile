@@ -17,6 +17,12 @@
 #                    writes BENCH_preemption_smoke.json and asserts
 #                    growth-on/off greedy streams identical + a strict
 #                    admitted-concurrency gain
+#   make bench-chunked CI-sized chunked-prefill benchmark; writes
+#                    BENCH_chunked_prefill_smoke.json and asserts
+#                    pool-direct prefill strictly cuts TTFT and copied
+#                    KV bytes vs the staged-then-splice model
+#   make clean       remove gitignored build/bench litter (smoke
+#                    artifacts, __pycache__, pytest caches)
 #
 # BENCH_*_smoke.json artifacts are gitignored — smoke runs never dirty
 # the tree; the committed BENCH_*.json files come from full runs.
@@ -25,7 +31,7 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint bench bench-paged bench-smoke bench-prefix \
-    bench-preempt
+    bench-preempt bench-chunked clean
 
 test:
 	$(PY) -m pytest -x -q
@@ -51,3 +57,11 @@ bench-prefix:
 
 bench-preempt:
 	$(PY) -m benchmarks.preemption --smoke
+
+bench-chunked:
+	$(PY) -m benchmarks.chunked_prefill --smoke
+
+clean:
+	rm -f BENCH_*_smoke.json
+	rm -rf .pytest_cache .ruff_cache
+	find . -name __pycache__ -type d -prune -exec rm -rf {} +

@@ -17,6 +17,10 @@ aggregate worst case, reporting per configuration:
 * ``peak_blocks_live`` — allocator occupancy watermark,
 * ``preemptions`` — total evictions (growth only; 0 when the actual
   usage fits, which is the point of the eos-early workload),
+* ``replay_iterations`` / ``recovery_time_s`` — total non-emitting
+  iterations spent re-feeding already-streamed tokens after evictions
+  (chunked recovery keeps this O(stream / prefill_chunk) per
+  preemption) and the summed eviction→next-emission wall clock,
 * ``ttft_p50`` / ``ttft_p90``, ``wall_s``, ``tokens_per_s`` — the
   queueing-delay and throughput effect of admitting earlier
   (CPU-relative; same caveats as benchmarks/paged_vs_dense.py).
@@ -100,6 +104,8 @@ def _serve(prompts, eos_ids, growth: bool, slots: int, max_seq: int,
     return {"peak_running": peak_running,
             "peak_blocks_live": eng.allocator.peak_live,
             "preemptions": sum(o.num_preemptions for o in outs),
+            "replay_iterations": sum(o.replay_iterations for o in outs),
+            "recovery_time_s": sum(o.recovery_time for o in outs),
             "ttft_p50": ttft["p50"], "ttft_p90": ttft["p90"],
             "tokens_per_s": toks / wall, "wall_s": wall}, \
         [o.output_token_ids for o in outs]

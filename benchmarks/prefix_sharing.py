@@ -56,8 +56,9 @@ def _serve(system, prompts, prefix: bool, slots: int, max_seq: int,
         prefill_chunk=BLOCK, enable_prefix_caching=prefix))
     # warm-up: compile every graph off the clock.  The repeated prompt
     # makes the second submission a prefix *hit* (compiling the warm
-    # paths: gather-seeded staging + tail chunks) and the block-aligned
-    # truncation a COW-tail hit (compiling the block copy); none of the
+    # path: prefill resumed mid-stream at the shared frontier) and the
+    # block-aligned truncation a COW-tail hit (compiling the block
+    # copy); none of the
     # warm-up tokens match the workload, so no usable prefix is seeded.
     # The sharing-off engine serves the same sequence cold — both
     # engines enter the measured burst with identical compile state.

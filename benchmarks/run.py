@@ -23,6 +23,10 @@ TABLES = {
                    "In-kernel paged attention vs gather+kernel"),
     "prefix": ("benchmarks.prefix_sharing",
                "Prefix sharing on a shared-system-prompt workload"),
+    "preempt": ("benchmarks.preemption",
+                "Block growth vs reservation on an over-committed pool"),
+    "chunked": ("benchmarks.chunked_prefill",
+                "Pool-direct chunked prefill vs staged-then-splice"),
 }
 
 

@@ -15,7 +15,7 @@ from .gemm import mp_matmul, dense_matmul
 from .kvcache import KVCache, init_cache, cache_spec, append, store_dim
 from .paged_kvcache import (PagedKVCache, BlockAllocator, OutOfBlocksError,
                             init_paged, append_paged, gather_view,
-                            scatter_slot, blocks_needed, kv_bytes)
+                            blocks_needed, kv_bytes)
 from .attention import (prefill_attention, decode_attention, cross_attention,
                         flash_attention)
 
@@ -25,8 +25,7 @@ __all__ = [
     "quantize_rowmajor", "mp_matmul", "dense_matmul",
     "KVCache", "init_cache", "cache_spec", "append", "store_dim",
     "PagedKVCache", "BlockAllocator", "OutOfBlocksError", "init_paged",
-    "append_paged", "gather_view", "scatter_slot", "blocks_needed",
-    "kv_bytes",
+    "append_paged", "gather_view", "blocks_needed", "kv_bytes",
     "prefill_attention", "decode_attention", "cross_attention",
     "flash_attention",
 ]

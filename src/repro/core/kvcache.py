@@ -87,25 +87,44 @@ def append(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
 
 
 def append_per_slot(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
-                    pos: jax.Array, spec: FormatSpec) -> KVCache:
+                    pos: jax.Array, spec: FormatSpec,
+                    valid=None) -> KVCache:
     """Ragged append: each batch slot writes at its own position.
 
     k_new/v_new: (B, T, H, D); pos: (B,) int32.  Used by the continuous-
     batching engine where slots are at different sequence lengths.
+    ``valid`` (optional, (B,) int32) masks the write to each slot's first
+    ``valid[b]`` tokens — rows past it are *dropped*, not clamped, so a
+    padded mixed prefill/decode step never dirties cells beyond a slot's
+    true frontier.  The write is a flat scatter (out-of-range rows get an
+    out-of-bounds index, ``mode="drop"``): for fully-valid in-range
+    appends it stores byte-identical values at byte-identical locations
+    as a dynamic_update_slice would.
     """
+    B, T = k_new.shape[:2]
+    S = cache.k.shape[1]
     kq, ks = Q.quantize_kv(k_new, spec)
     vq, vs = Q.quantize_kv(v_new, spec)
-
-    def write(buf, val, p):      # buf (S, H, d), val (T, H, d), p scalar
-        return jax.lax.dynamic_update_slice(buf, val, (p, 0, 0))
-
-    w = jax.vmap(write, in_axes=(0, 0, 0))
     pos = pos.astype(jnp.int32)
+    tok = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    ok = tok < S
+    if valid is not None:
+        ok &= jnp.arange(T, dtype=jnp.int32)[None] < \
+            jnp.asarray(valid, jnp.int32)[:, None]
+    flat = jnp.where(ok, jnp.arange(B, dtype=jnp.int32)[:, None] * S + tok,
+                     jnp.int32(B * S)).reshape(-1)
+
+    def put(buf, val):
+        p = buf.reshape((B * S,) + buf.shape[2:])
+        p = p.at[flat].set(val.reshape((B * T,) + val.shape[2:]),
+                           mode="drop")
+        return p.reshape(buf.shape)
+
     return KVCache(
-        k=w(cache.k, kq, pos), v=w(cache.v, vq, pos),
-        k_scale=w(cache.k_scale, ks.astype(jnp.float32), pos),
-        v_scale=w(cache.v_scale, vs.astype(jnp.float32), pos),
-        length=cache.length + k_new.shape[1],
+        k=put(cache.k, kq), v=put(cache.v, vq),
+        k_scale=put(cache.k_scale, ks.astype(jnp.float32)),
+        v_scale=put(cache.v_scale, vs.astype(jnp.float32)),
+        length=cache.length + T,
     )
 
 

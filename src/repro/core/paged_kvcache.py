@@ -385,12 +385,17 @@ def _pool_scatter(pool: jax.Array, flat: jax.Array,
 
 
 def append_paged(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
-                 pos: jax.Array, spec: FormatSpec) -> PagedKVCache:
+                 pos: jax.Array, spec: FormatSpec,
+                 valid=None) -> PagedKVCache:
     """Ragged append through the block table: slot ``b`` quantizes and
     writes its ``T`` new tokens at logical positions ``pos[b] + t``.
 
     k_new/v_new: (B, T, H, D) compute dtype; pos: (B,) int32 (a scalar is
-    broadcast).  Same quantization path as the dense cache — values land
+    broadcast).  ``valid`` (optional, (B,) int32) masks the write to each
+    slot's first ``valid[b]`` tokens — chunk rows past a slot's true
+    frontier in a padded mixed prefill/decode step are *dropped* (they
+    would otherwise land in live cells of refcounted shared blocks).
+    Same quantization path as the dense cache — values land
     bit-identical, only the layout differs.
     """
     B, T = k_new.shape[:2]
@@ -400,7 +405,13 @@ def append_paged(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
     if pos.ndim == 0:
         pos = jnp.broadcast_to(pos, (B,))
     tok = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]   # (B, T)
-    flat = _flat_indices(cache, tok).reshape(-1)
+    flat = _flat_indices(cache, tok)
+    if valid is not None:
+        flat = jnp.where(
+            jnp.arange(T, dtype=jnp.int32)[None] <
+            jnp.asarray(valid, jnp.int32)[:, None],
+            flat, jnp.int32(cache.n_blocks * cache.block_size))
+    flat = flat.reshape(-1)
     merge = lambda a: a.reshape((B * T,) + a.shape[2:])
     return PagedKVCache(
         k=_pool_scatter(cache.k, flat, merge(kq)),
@@ -471,38 +482,6 @@ def gather_view(cache: PagedKVCache,
                       length=cache.length)
 
 
-def scatter_slot(cache: PagedKVCache, dense: KV.KVCache,
-                 slot: jax.Array, start: jax.Array = 0) -> PagedKVCache:
-    """Move one prefilled single-slot dense cache into ``slot``'s blocks.
-
-    ``dense`` holds B=1 *already-quantized* KV for logical positions
-    ``[0, S_tmp)`` (the engine's ragged-prefill staging buffer); values are
-    copied verbatim — no requantization — so the paged cache ends up
-    bit-identical to a dense-slab splice of the same buffer.  Positions
-    beyond the slot's allocated blocks hit sentinel table entries and are
-    dropped; positions below ``start`` are dropped too — on a prefix hit
-    the staging buffer's head is bytes *gathered from* shared pool blocks
-    (:func:`gather_slot`), and rewriting them would be pure redundant
-    HBM traffic proportional to the shared prefix.
-    """
-    S = dense.k.shape[1]
-    slot = jnp.asarray(slot, jnp.int32)
-    tok = jnp.arange(S, dtype=jnp.int32)[None]               # (1, S)
-    row = jax.lax.dynamic_slice_in_dim(cache.block_table, slot, 1, 0)
-    row_cache = dataclasses.replace(cache, block_table=row)
-    flat = _flat_indices(row_cache, tok).reshape(-1)
-    flat = jnp.where(tok.reshape(-1) >= jnp.asarray(start, jnp.int32),
-                     flat, jnp.int32(cache.n_blocks * cache.block_size))
-    put = lambda pool, val: _pool_scatter(pool, flat, val[0])
-    return PagedKVCache(
-        k=put(cache.k, dense.k), v=put(cache.v, dense.v),
-        k_scale=put(cache.k_scale, dense.k_scale),
-        v_scale=put(cache.v_scale, dense.v_scale),
-        block_table=cache.block_table,
-        length=cache.length.at[slot].set(dense.length[0]),
-    )
-
-
 def copy_block(cache: PagedKVCache, src: jax.Array,
                dst: jax.Array) -> PagedKVCache:
     """Copy one pool block's K/V/scale bytes ``src`` → ``dst``.
@@ -528,24 +507,6 @@ def copy_block(cache: PagedKVCache, src: jax.Array,
     return dataclasses.replace(cache, k=cp(cache.k), v=cp(cache.v),
                                k_scale=cp(cache.k_scale),
                                v_scale=cp(cache.v_scale))
-
-
-def gather_slot(cache: PagedKVCache, slot: jax.Array,
-                n_ctx: int) -> KV.KVCache:
-    """Dense ``(1, n_ctx, H, Dstore)`` view of one slot's logical context.
-
-    The reverse of :func:`scatter_slot`: on a prefix-cache hit the engine
-    seeds its B=1 prefill staging cache with the slot's already-mapped
-    shared blocks, so tail-token attention reads the *exact* bytes a cold
-    prefill would have produced (bitwise — the gather is a pure copy).
-    Positions beyond the mapped blocks clamp to finite garbage that the
-    causal mask removes, same as :func:`gather_view`.
-    """
-    slot = jnp.asarray(slot, jnp.int32)
-    row = jax.lax.dynamic_slice_in_dim(cache.block_table, slot, 1, 0)
-    ln = jax.lax.dynamic_slice_in_dim(cache.length, slot, 1, 0)
-    sub = dataclasses.replace(cache, block_table=row, length=ln)
-    return gather_view(sub, n_ctx)
 
 
 def kv_bytes(cache) -> int:

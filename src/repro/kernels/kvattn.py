@@ -68,6 +68,10 @@ def flash_block_update(q, kt, ks, vt, vs, pos, window, base,
     only place the dense and paged kernels differ (dense: ``s_blk *
     block_s`` over the slab; paged: ``logical_block * block_size``, while
     the tile itself was DMA'd from wherever the block table pointed).
+    ``pos`` is a scalar (one causal frontier for every q row) or an
+    (R, 1) per-row frontier — the multi-query grid passes ``first_pos +
+    row // rep`` so each query token in the tile masks at its own
+    position; the mask arithmetic broadcasts over either shape.
     Updates the online-softmax scratch (m, l, acc) in place.  A fully
     masked tile is an exact no-op (alpha = e^0 = 1, p = 0), which is what
     lets a shorter grid (live context) match a longer one bitwise.
@@ -109,8 +113,8 @@ def flash_store(o_ref, m_ref, l_ref, acc_ref):
 
 
 def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, win_ref,
-                   o_ref, m_ref, l_ref, acc_ref, *, block_s, n_s, d, packed,
-                   kv_is_float):
+                   o_ref, m_ref, l_ref, acc_ref, *, block_s, n_s, d, rep,
+                   packed, kv_is_float):
     s_blk = pl.program_id(2)
 
     @pl.when(s_blk == 0)
@@ -119,11 +123,17 @@ def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, win_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0, 0]                # this slot's newest-token position
+    # q rows are (token, group) pairs in token-major order (r = t*rep + g):
+    # row r's query is the chunk's t-th token, so its causal frontier is
+    # pos + r // rep.  T == 1 degenerates to qpos == pos for every row —
+    # bitwise the original single-token decode.
+    R = m_ref.shape[0]
+    pos = pos_ref[0, 0]        # this slot's first (oldest) query position
     win = win_ref[0, 0]
+    qpos = pos + jax.lax.broadcasted_iota(jnp.int32, (R, 1), 0) // rep
     flash_block_update(
         q_ref[0, 0], k_ref[0, :, 0], ks_ref[0, :, 0], v_ref[0, :, 0],
-        vs_ref[0, :, 0], pos, win, s_blk * block_s, m_ref, l_ref, acc_ref,
+        vs_ref[0, :, 0], qpos, win, s_blk * block_s, m_ref, l_ref, acc_ref,
         d=d, packed=packed, kv_is_float=kv_is_float)
 
     @pl.when(s_blk == n_s - 1)
@@ -133,22 +143,33 @@ def _kvattn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, win_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("packed", "kv_is_float", "block_s", "interpret"))
+    static_argnames=("packed", "kv_is_float", "block_s", "rep", "interpret"))
 def kvattn_decode_grouped(
-    q: jax.Array,          # (B, Hkv, rep, D) bf16 — adaptive head alignment
+    q: jax.Array,          # (B, Hkv, R, D) bf16 — adaptive head alignment
     k: jax.Array,          # (B, S, Hkv, Dstore) int8 / fp8 / bf16
     k_scale: jax.Array,    # (B, S, Hkv) f32
     v: jax.Array,
     v_scale: jax.Array,
-    pos: jax.Array,        # (B, 1) int32: per-slot newest-token index
+    pos: jax.Array,        # (B, 1) int32: per-slot *first* query position
     window: jax.Array,     # (1, 1) int32: sliding window (NO_WINDOW = off)
     *,
     packed: bool,
     kv_is_float: bool = False,
     block_s: int = 256,
+    rep: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    B, Hkv, rep, D = q.shape
+    """Multi-query grouped decode attention.
+
+    The q tile carries ``R = T * rep`` rows per (batch, kv-head) grid cell
+    in token-major order — ``rep`` consecutive rows share one causal
+    frontier, and frontiers step by one every ``rep`` rows.  ``rep=None``
+    (back-compat) treats the whole tile as a single token (T == 1).
+    """
+    B, Hkv, R, D = q.shape
+    if rep is None:
+        rep = R
+    assert R % rep == 0, (R, rep)
     S = k.shape[1]
     Ds = k.shape[3]
     bs = min(block_s, S)
@@ -157,13 +178,13 @@ def kvattn_decode_grouped(
 
     grid = (B, Hkv, n_s)
     kernel = functools.partial(
-        _kvattn_kernel, block_s=bs, n_s=n_s, d=D, packed=packed,
+        _kvattn_kernel, block_s=bs, n_s=n_s, d=D, rep=rep, packed=packed,
         kv_is_float=kv_is_float)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, rep, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, D), lambda b, h, s: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, Ds), lambda b, h, s: (b, s, h, 0)),
             pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
             pl.BlockSpec((1, bs, 1, Ds), lambda b, h, s: (b, s, h, 0)),
@@ -173,12 +194,12 @@ def kvattn_decode_grouped(
             pl.BlockSpec((1, 1), lambda b, h, s: (0, 0),
                          memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, rep, D), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, R, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, D), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, D), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, k_scale, v, v_scale, pos, window)

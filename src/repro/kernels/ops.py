@@ -100,53 +100,82 @@ def _norm_window(window) -> jax.Array:
     return jnp.asarray(window, jnp.int32).reshape(1)
 
 
+def _group_rows(q: jax.Array, Hkv: int, rep: int):
+    """(B, T, H, D) → ((B, Hkv, T*rk, D), rk) token-major q tile.
+
+    Rows come out as ``r = t*rk + g``: the ``rk`` grouped-query heads of
+    one token are consecutive, so the kernels' per-row causal frontier is
+    ``first_pos + r // rk``.  ``rep == 1`` is zero-padded to ``rk == 2``
+    (the pad rows are sliced off by :func:`_ungroup_rows`): a one-row
+    q tile would hit XLA:CPU's GEMV path, whose summation order differs
+    bitwise from the ≥2-row GEMM path, breaking the engine's cross-chunk
+    byte-identity contract."""
+    B, T, H, D = q.shape
+    qg = q.reshape(B, T, Hkv, rep, D)
+    rk = rep
+    if rep == 1:
+        qg = jnp.concatenate([qg, jnp.zeros_like(qg)], axis=3)
+        rk = 2
+    return qg.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, T * rk, D), rk
+
+
+def _ungroup_rows(out: jax.Array, B: int, T: int, Hkv: int, rep: int,
+                  rk: int, D: int) -> jax.Array:
+    """Inverse of :func:`_group_rows` (drops any rep-1 pad rows)."""
+    o = out.reshape(B, Hkv, T, rk, D).transpose(0, 2, 1, 3, 4)
+    return o[:, :, :, :rep, :].reshape(B, T, Hkv * rep, D)
+
+
 def kvattn_decode(q: jax.Array, cache: KVCache, spec: FormatSpec,
                   pos, window=None, block_s: int = 256) -> jax.Array:
-    """Decode attention for one new token.  q: (B, 1, H, D); ``pos`` is a
-    scalar or a per-slot (B,) vector of newest-token positions (the
-    continuous-batching engine's ragged slots).  ``window`` may be None,
-    an int, or a traced int32 scalar (per-layer local/global mixes)."""
+    """Decode/chunked-prefill attention.  q: (B, T, H, D); ``pos`` is a
+    scalar or a per-slot (B,) vector of *first*-query-token positions
+    (the continuous-batching engine's ragged slots) — token t of the
+    chunk attends causally through position ``pos + t``.  ``window`` may
+    be None, an int, or a traced int32 scalar (per-layer local/global
+    mixes)."""
     B, T, H, D = q.shape
-    assert T == 1, "pallas decode kernel is single-token (use prefill path)"
     Hkv = cache.k.shape[2]
     rep = H // Hkv
-    qg = q.reshape(B, Hkv, rep, D)          # adaptive head alignment (§4.2)
+    qg, rk = _group_rows(q, Hkv, rep)       # adaptive head alignment (§4.2)
     out = _kvattn.kvattn_decode_grouped(
         qg.astype(jnp.bfloat16),
         cache.k, cache.k_scale[..., 0], cache.v, cache.v_scale[..., 0],
         _norm_pos(pos, B).reshape(B, 1), _norm_window(window).reshape(1, 1),
         packed=spec.packed, kv_is_float=spec.is_float,
-        block_s=block_s, interpret=INTERPRET)
-    return out.reshape(B, 1, H, D).astype(q.dtype)
+        block_s=block_s, rep=rk, interpret=INTERPRET)
+    return _ungroup_rows(out, B, T, Hkv, rep, rk, D).astype(q.dtype)
 
 
 def kvattn_decode_paged(q: jax.Array, cache: PagedKVCache, spec: FormatSpec,
                         pos, window=None,
                         max_live: Optional[int] = None) -> jax.Array:
-    """Paged decode attention with **in-kernel** block-table indirection.
+    """Paged decode/chunked-prefill attention with **in-kernel**
+    block-table indirection.
 
-    q: (B, 1, H, D); ``cache`` is a per-layer (unstacked) PagedKVCache
-    whose block table maps each of the B slots' logical contexts.  No
-    dense view is ever materialized: the kernel scalar-prefetches the
-    table and DMAs K/V/scale tiles block-by-block straight out of the
-    pool (kernels/paged_kvattn.py).  ``max_live`` (static, tokens) bounds
-    the grid's block axis at the batch's live-context high-water mark —
-    rounded up to whole blocks — so per-step traffic scales with live
-    context, not ``max_context``.  Unmapped (sentinel) table entries are
-    clamped to a real pool block and zeroed exactly by the kernel's
-    ``kpos <= pos`` mask."""
+    q: (B, T, H, D); ``cache`` is a per-layer (unstacked) PagedKVCache
+    whose block table maps each of the B slots' logical contexts; ``pos``
+    is the per-slot *first*-query-token position (token t attends through
+    ``pos + t``).  No dense view is ever materialized: the kernel
+    scalar-prefetches the table and DMAs K/V/scale tiles block-by-block
+    straight out of the pool (kernels/paged_kvattn.py).  ``max_live``
+    (static, tokens) bounds the grid's block axis at the batch's
+    live-context high-water mark for the *first* query row — widened by
+    T-1 so the chunk's last token's frontier stays in-grid — so per-step
+    traffic scales with live context, not ``max_context``.  Unmapped
+    (sentinel) table entries are clamped to a real pool block and zeroed
+    exactly by the kernel's ``kpos <= pos`` mask."""
     B, T, H, D = q.shape
-    assert T == 1, "pallas decode kernel is single-token (use prefill path)"
     Hkv = cache.k.shape[2]
     rep = H // Hkv
-    qg = q.reshape(B, Hkv, rep, D)          # adaptive head alignment (§4.2)
+    qg, rk = _group_rows(q, Hkv, rep)       # adaptive head alignment (§4.2)
     n_live = None
     if max_live is not None:
-        n_live = blocks_needed(max_live, cache.block_size)
+        n_live = blocks_needed(max_live + T - 1, cache.block_size)
     out = _pkvattn.paged_kvattn_decode_grouped(
         qg.astype(jnp.bfloat16),
         cache.k, cache.k_scale[..., 0], cache.v, cache.v_scale[..., 0],
         cache.block_table, _norm_pos(pos, B), _norm_window(window),
         packed=spec.packed, kv_is_float=spec.is_float,
-        n_live_blocks=n_live, interpret=INTERPRET)
-    return out.reshape(B, 1, H, D).astype(q.dtype)
+        n_live_blocks=n_live, rep=rk, interpret=INTERPRET)
+    return _ungroup_rows(out, B, T, Hkv, rep, rk, D).astype(q.dtype)

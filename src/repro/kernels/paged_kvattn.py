@@ -49,7 +49,7 @@ from .kvattn import NEG_INF, flash_block_update, flash_store
 def _paged_kvattn_kernel(tbl_ref, pos_ref, win_ref,
                          q_ref, k_ref, ks_ref, v_ref, vs_ref,
                          o_ref, m_ref, l_ref, acc_ref, *,
-                         block_size, n_s, d, packed, kv_is_float):
+                         block_size, n_s, d, rep, packed, kv_is_float):
     b = pl.program_id(0)
     s_blk = pl.program_id(2)   # logical block index within the slot
 
@@ -59,13 +59,18 @@ def _paged_kvattn_kernel(tbl_ref, pos_ref, win_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[b]                   # this slot's newest-token position
+    # q rows are (token, group) pairs in token-major order (r = t*rep + g):
+    # row r's causal frontier is pos + r // rep.  T == 1 keeps qpos == pos
+    # for every row — bitwise the original single-token decode.
+    R = m_ref.shape[0]
+    pos = pos_ref[b]            # this slot's first (oldest) query position
     win = win_ref[0]
+    qpos = pos + jax.lax.broadcasted_iota(jnp.int32, (R, 1), 0) // rep
     # the K/V tiles were DMA'd from pool block tbl[b, s_blk]; their
     # *logical* positions start at s_blk * block_size
     flash_block_update(
         q_ref[0, 0], k_ref[0, :, 0], ks_ref[0, :, 0], v_ref[0, :, 0],
-        vs_ref[0, :, 0], pos, win, s_blk * block_size,
+        vs_ref[0, :, 0], qpos, win, s_blk * block_size,
         m_ref, l_ref, acc_ref, d=d, packed=packed, kv_is_float=kv_is_float)
 
     @pl.when(s_blk == n_s - 1)
@@ -75,23 +80,34 @@ def _paged_kvattn_kernel(tbl_ref, pos_ref, win_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("packed", "kv_is_float", "n_live_blocks", "interpret"))
+    static_argnames=("packed", "kv_is_float", "n_live_blocks", "rep",
+                     "interpret"))
 def paged_kvattn_decode_grouped(
-    q: jax.Array,            # (B, Hkv, rep, D) bf16 — adaptive head alignment
+    q: jax.Array,            # (B, Hkv, R, D) bf16 — adaptive head alignment
     k: jax.Array,            # (n_blocks, block_size, Hkv, Dstore) pool
     k_scale: jax.Array,      # (n_blocks, block_size, Hkv) f32
     v: jax.Array,
     v_scale: jax.Array,
     block_table: jax.Array,  # (B, blocks_per_slot) int32; n_blocks=unmapped
-    pos: jax.Array,          # (B,) int32: per-slot newest-token index
+    pos: jax.Array,          # (B,) int32: per-slot *first* query position
     window: jax.Array,       # (1,) int32 window (kvattn.NO_WINDOW = off)
     *,
     packed: bool,
     kv_is_float: bool = False,
     n_live_blocks=None,      # static: grid extent ≤ blocks_per_slot
+    rep: int | None = None,  # static: rows per query token (None → R, T=1)
     interpret: bool = False,
 ) -> jax.Array:
-    B, Hkv, rep, D = q.shape
+    """Multi-query paged decode: the q tile carries ``R = T * rep`` rows
+    per (slot, kv-head) grid cell in token-major order — ``rep``
+    consecutive rows share one causal frontier, frontiers step by one
+    every ``rep`` rows.  ``rep=None`` (back-compat) treats the whole tile
+    as one token.  This is the single kernel behind chunked prefill,
+    preemption replay, and decode."""
+    B, Hkv, R, D = q.shape
+    if rep is None:
+        rep = R
+    assert R % rep == 0, (R, rep)
     nb, bs = k.shape[0], k.shape[1]
     Ds = k.shape[3]
     nbp = block_table.shape[1]
@@ -106,7 +122,7 @@ def paged_kvattn_decode_grouped(
         num_scalar_prefetch=3,         # block table, positions, window
         grid=(B, Hkv, n_s),
         in_specs=[
-            pl.BlockSpec((1, 1, rep, D),
+            pl.BlockSpec((1, 1, R, D),
                          lambda b, h, s, tbl, pos, win: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, Ds),
                          lambda b, h, s, tbl, pos, win: (tbl[b, s], 0, h, 0)),
@@ -117,21 +133,21 @@ def paged_kvattn_decode_grouped(
             pl.BlockSpec((1, bs, 1),
                          lambda b, h, s, tbl, pos, win: (tbl[b, s], 0, h)),
         ],
-        out_specs=pl.BlockSpec((1, 1, rep, D),
+        out_specs=pl.BlockSpec((1, 1, R, D),
                                lambda b, h, s, tbl, pos, win: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, D), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, D), jnp.float32),
         ],
     )
     kernel = functools.partial(
-        _paged_kvattn_kernel, block_size=bs, n_s=n_s, d=D, packed=packed,
-        kv_is_float=kv_is_float)
+        _paged_kvattn_kernel, block_size=bs, n_s=n_s, d=D, rep=rep,
+        packed=packed, kv_is_float=kv_is_float)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
         interpret=interpret,
     )(tbl, pos.astype(jnp.int32), window.astype(jnp.int32),
       q, k, k_scale, v, v_scale)

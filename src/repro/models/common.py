@@ -117,45 +117,49 @@ def maybe_quantize(w: jax.Array, policy: PrecisionPolicy,
 def attend_decode(q: jax.Array, cache_l, spec: FormatSpec, pos,
                   window=None, impl: str = "fused", block_s=None,
                   max_live=None) -> jax.Array:
-    """Decode attention over either cache backend (per-layer view).
+    """Decode / chunked-prefill attention over either cache backend
+    (per-layer view).  q: (B, T, H, D) — ``pos`` is the per-slot
+    *first*-query-token position; token t attends causally through
+    ``pos + t``.
 
     Dense ``KVCache`` goes straight to the attention pipeline.  A
-    ``PagedKVCache`` dispatches to the paged Pallas kernel
-    (kernels/paged_kvattn.py) for single-token decode under both the
-    default (``fused``) and ``pallas`` impls: the block-table indirection
-    happens *inside* the kernel (scalar-prefetched tables drive per-block
-    DMA out of the pool), so no dense view is ever materialized and
-    per-step traffic is bounded by ``max_live`` (the batch's live-context
-    high-water mark, in tokens) rather than ``max_context``.
+    ``PagedKVCache`` dispatches to the paged multi-query Pallas kernel
+    (kernels/paged_kvattn.py) for *any* T under both the default
+    (``fused``) and ``pallas`` impls — chunked prefill, preemption
+    replay, and single-token decode all run the same q-tile × block
+    grid: the block-table indirection happens *inside* the kernel
+    (scalar-prefetched tables drive per-block DMA out of the pool), so
+    no dense view is ever materialized and per-step traffic is bounded
+    by ``max_live`` (the batch's first-row live-context high-water mark,
+    in tokens; the wrapper widens it by T-1 for the chunk tail) rather
+    than ``max_context``.
 
-    The fused-XLA gather fallback remains only for multi-token queries
-    (the engine's chunked prefill never pages, so this is a compat path)
-    and explicitly requested XLA impls; it gathers a *live-context-capped*
-    dense view, not worst-case ``max_context``.  Un-jitted callers on the
-    fallback should pass ``max_live`` — deriving the cap from the cache's
-    ``length`` costs one device sync per call (per layer, in a loop).
-    Positions at or beyond a slot's write frontier hold arbitrary finite
-    pool data; the causal ``kpos <= pos`` mask turns them into exact
-    zeros, so both backends produce bit-identical outputs.
+    ``impl="xla"`` is the explicit interpret/debug opt-out: it gathers a
+    *live-context-capped* dense view through the block table and runs
+    the fused XLA pipeline.  Un-jitted callers on that path should pass
+    ``max_live`` — deriving the cap from the cache's ``length`` costs
+    one device sync per call (per layer, in a loop).  Positions at or
+    beyond a slot's write frontier hold arbitrary finite pool data; the
+    causal ``kpos <= pos`` mask turns them into exact zeros, so both
+    backends produce bit-identical outputs.
 
     ``block_s`` tunes the dense Pallas kernel's tile height; the engine
     sets it to the paged ``block_size`` so dense and paged flash-decode
     traverse blocks at the same granularity (bitwise-equal streams).
     """
     if isinstance(cache_l, PKV.PagedKVCache):
-        if impl in ("fused", "pallas") and q.shape[1] == 1:
+        if impl in ("fused", "pallas"):
             from repro.kernels import ops as kops
             return kops.kvattn_decode_paged(q, cache_l, spec, pos,
                                             window=window,
                                             max_live=max_live)
-        # max_live counts single-token decode context; a T-token chunk
-        # appends T-1 further positions that its own queries attend to,
-        # so widen the cap by the chunk extent before gathering.
+        # XLA opt-out: max_live counts first-query-row context; a
+        # T-token chunk appends T-1 further positions that its own
+        # queries attend to, so widen the cap before gathering.
         ml = None if max_live is None else max_live + q.shape[1] - 1
         cache_l = PKV.gather_view(cache_l,
                                   n_ctx=PKV.live_ctx(cache_l, ml))
-    if impl == "pallas" and q.shape[1] != 1:
-        impl = "fused"             # multi-token chunk: kernel is 1-token
+        impl = "fused"
     return A.decode_attention(q, cache_l, spec, pos, window=window,
                               impl=impl, block_s=block_s)
 

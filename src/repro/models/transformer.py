@@ -258,15 +258,25 @@ def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy,
                 impl: str = "xla", attn_impl: Optional[str] = None,
                 attn_block_s: Optional[int] = None,
                 max_live: Optional[int] = None,
+                valid: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, KV.KVCache]:
     """tokens: (B, T); pos: scalar or (B,) position of the first new token.
 
-    T > 1 is the engine's chunked ragged prefill: the T queries attend
-    causally to ``pos + t`` cached tokens each.  ``cache`` may be the dense
+    T > 1 is the engine's chunked ragged prefill / preemption replay /
+    mixed prefill+decode step: the T queries attend causally to
+    ``pos + t`` cached tokens each.  ``cache`` may be the dense
     :class:`KV.KVCache` slab or a :class:`PKV.PagedKVCache` block pool —
-    paged appends go through the block table and single-token decode runs
-    the paged Pallas kernel, which resolves the block table *inside* the
-    kernel (no dense per-slot view; see models/common.attend_decode).
+    paged appends go through the block table and decode/prefill alike run
+    the paged multi-query Pallas kernel, which resolves the block table
+    *inside* the kernel (no dense per-slot view; see
+    models/common.attend_decode).
+
+    ``valid`` (optional, (B,) int32) is the mixed-step ragged mask: slot
+    b's first ``valid[b]`` chunk rows are real, the rest padding.  KV
+    appends drop padded rows (they must not dirty cells past a slot's
+    frontier — shared prefix blocks are refcounted), and the returned
+    logits are taken from each slot's last *valid* row instead of row
+    T-1.  Attention over padded rows is computed and discarded.
 
     ``attn_impl`` picks the decode-attention path independently of the
     GEMM ``impl`` (default: ``fused`` XLA, or the flash-decode kernels
@@ -308,9 +318,11 @@ def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy,
             k = C.apply_rope(k, rope_pos, rotary_pct=cfg.rotary_pct,
                              theta=cfg.rope_theta)
         if paged:
-            cache_l = PKV.append_paged(cache_l, k, v, pos, policy.kv)
+            cache_l = PKV.append_paged(cache_l, k, v, pos, policy.kv,
+                                       valid=valid)
         elif per_slot:
-            cache_l = KV.append_per_slot(cache_l, k, v, pos, policy.kv)
+            cache_l = KV.append_per_slot(cache_l, k, v, pos, policy.kv,
+                                         valid=valid)
         else:
             cache_l = KV.append(cache_l, k, v, pos, policy.kv)
         win = layer_window(cfg, idx)
@@ -325,5 +337,12 @@ def decode_step(params, cfg: ModelConfig, policy: PrecisionPolicy,
 
     x, new_cache = jax.lax.scan(
         body, x, (params["layers"], cache, jnp.arange(cfg.n_layers)))
-    h_last = C.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    if valid is None:
+        h_sel = x[:, -1]
+    else:
+        # each slot samples from its last *valid* chunk row (idle slots
+        # clamp to row 0 — their logits are discarded by the engine)
+        idx = jnp.clip(valid.astype(jnp.int32) - 1, 0, T - 1)
+        h_sel = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    h_last = C.rms_norm(h_sel, params["final_norm"], cfg.norm_eps)
     return lm_logits(params, h_last), new_cache

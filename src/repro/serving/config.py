@@ -68,14 +68,16 @@ class EngineConfig:
     worst case; greedy streams are unchanged either way.
 
     ``attn_impl`` picks the decode-attention path for KV-transformer
-    families: ``"kernel"`` (default) runs the Pallas flash-decode
-    kernels — paged engines resolve block tables *in-kernel*, and dense
-    engines traverse the slab at the same block granularity, which is
-    what makes dense and paged greedy streams byte-identical.
-    ``"xla"`` opts a *dense* engine back onto the fused-XLA attention —
-    useful off-TPU, where Pallas runs in interpret mode (Python-slow);
-    it forfeits bitwise parity with a paged twin, and paged engines
-    ignore it (in-kernel paging is the backend's point).  The default is
+    families: ``"kernel"`` (default) runs the Pallas multi-query
+    flash-decode kernels for prefill chunks, preemption replay, and
+    decode alike — paged engines resolve block tables *in-kernel*, and
+    dense engines traverse the slab at the same block granularity, which
+    is what makes dense and paged greedy streams byte-identical.
+    ``"xla"`` opts back onto the fused-XLA attention — useful off-TPU,
+    where Pallas runs in interpret mode (Python-slow); on a paged engine
+    it gathers a transient live-context-capped dense view through the
+    block table (the one remaining ``gather_view`` consumer).  It
+    forfeits bitwise parity with a ``"kernel"`` twin.  The default is
     ``"kernel"`` on *every* backend deliberately: a host-dependent
     default would make dense/paged parity — and greedy token streams —
     vary by machine.
@@ -149,6 +151,24 @@ class EngineConfig:
                 raise EngineError(
                     "paged cache does not support modality-stub families "
                     "(their prefill consumes extra encoder inputs)")
+            # chunk/block alignment: kernel prefill quantize-and-writes
+            # chunks straight into pool blocks, so a chunk must either
+            # tile a block exactly or span whole blocks — a straddling
+            # chunk (e.g. chunk=6, block=4) would split a block write
+            # across steps and desync the chunk-partition-independence
+            # guarantee
+            if self.attn_impl == "kernel" and \
+                    self.prefill_chunk % self.block_size and \
+                    self.block_size % self.prefill_chunk:
+                lo = (self.prefill_chunk // self.block_size) \
+                    * self.block_size
+                raise EngineError(
+                    f"prefill_chunk={self.prefill_chunk} must divide or "
+                    f"be a multiple of block_size={self.block_size} for "
+                    "paged kernel prefill (chunks are written straight "
+                    "into pool blocks); try --prefill-chunk "
+                    f"{max(lo, self.block_size)} or "
+                    f"{lo + self.block_size}")
         else:
             if self.enable_prefix_caching:
                 # prefix sharing maps one physical block into several
@@ -227,12 +247,16 @@ class EngineConfig:
                         help="KV pool blocks (paged; default: dense parity)")
         ap.add_argument("--prefill-chunk", type=int,
                         default=d["prefill_chunk"],
-                        help="tokens per ragged-prefill step")
+                        help="tokens per ragged-prefill step (paged "
+                             "kernel engines: must divide or be a "
+                             "multiple of --block-size)")
         ap.add_argument("--attn-impl", choices=("kernel", "xla"),
                         default=d["attn_impl"],
-                        help="decode attention: Pallas flash-decode "
-                             "kernels (byte-identical dense/paged) or "
-                             "fused XLA for dense engines off-TPU")
+                        help="attention path: Pallas multi-query "
+                             "flash-decode kernels (byte-identical "
+                             "dense/paged; prefill+replay+decode in one "
+                             "kernel) or fused XLA off-TPU (paged: "
+                             "transient gathered view)")
         ap.add_argument("--enable-prefix-caching", action="store_true",
                         default=d["enable_prefix_caching"],
                         help="share full prompt-prefix KV blocks across "

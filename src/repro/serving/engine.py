@@ -34,10 +34,12 @@ backends:
   allocates one block lazily whenever a slot's next append crosses a
   block boundary, and pool exhaustion preempts the youngest running
   request — its blocks are freed, it requeues at the *front* of the
-  waiting queue (``Status.PREEMPTED``), and on re-admission its prompt
-  is re-prefilled and its already-produced tokens are *replayed*
-  through the ordinary decode path (each forced instead of sampled), so
-  recovery is byte-exact (DESIGN.md §5.3).  With
+  waiting queue (``Status.PREEMPTED``), and on re-admission its whole
+  stream — prompt *and* already-produced tokens — is re-fed in forced
+  multi-token chunks through the ordinary step (fed from the recorded
+  stream instead of the sampler, nothing re-emitted), so recovery is
+  byte-exact in O(stream / prefill_chunk) iterations (DESIGN.md §5.3).
+  With
   ``enable_prefix_caching``, full prompt blocks are additionally
   published in a content-addressed :class:`PrefixIndex`; a new request
   whose prompt matches a cached chain maps the *same physical blocks*
@@ -45,27 +47,33 @@ backends:
   skipping their prefill compute and allocation entirely — and reports
   the hit as ``RequestOutput.cached_tokens`` (DESIGN.md §5.2).
 
-Prompt ingestion is **chunked ragged prefill** for every KV-cache family:
-the true prompt (no bucket padding, no pad tokens) is pushed through
-multi-token decode steps of ``prefill_chunk`` tokens against a small B=1
-staging cache, then the already-quantized staging KV is spliced (dense) or
-block-scattered (paged) into the batch store.  Both backends run the same
-staging computation, and at decode both run the *same* per-block
-flash-decode update (kernels/kvattn.flash_block_update) over bit-identical
-KV tiles — dense walks the slab, paged resolves its block table inside
-the kernel (kernels/paged_kvattn.py, no dense gather) with the grid
-bounded by the batch's live context — so the two engines produce
+Prompt ingestion is **pool-direct chunked prefill** for every KV-cache
+family: prompt + produced output form one logical token stream per
+request, ``step()`` feeds the next ``prefill_chunk`` unfed tokens of
+every running request through one batched multi-token ``decode_step``,
+and the chunk's KV is quantized and written *straight into the batch
+store* (pool blocks / dense slab) — there is no staging cache, no
+splice, and no separate prefill graph.  Prefill chunks, preemption
+replay, and steady-state decode are all the same mixed step: a slot
+mid-prompt contributes ``prefill_chunk`` rows, a decoding slot
+contributes one valid row (the rest padding, dropped by the ragged
+``valid`` mask), and both run the *same* per-block flash-decode update
+(kernels/kvattn.flash_block_update) over bit-identical KV tiles — dense
+walks the slab, paged resolves its block table inside the multi-query
+kernel (kernels/paged_kvattn.py, no dense gather) with the grid bounded
+by the batch's live context.  The two backends therefore produce
 **bit-identical greedy streams** (locked down by
-tests/test_engine_paged.py).  Recurrent-state and
+tests/test_engine_paged.py), and the stream is invariant to the chunk
+partition (tests/test_kernels_mq_paged_attn.py).  Recurrent-state and
 modality-stub families (no KV cache to page / extra encoder inputs) use
-an exact-length one-shot prefill instead.
+an exact-length one-shot prefill instead and decode one token per step.
 
 Sampling is per-slot end-to-end: each request carries its own RNG stream
 (``fold_in(PRNGKey(request seed), decode step)``), so seeded requests are
-reproducible regardless of batch composition.  Decode positions are
-tracked host-side (they advance deterministically) — the device
-``positions`` array exists only for the kernels, and the main loop's sole
-device→host sync per iteration is the sampled-token fetch.
+reproducible regardless of batch composition.  Feed cursors (`Request.pos`)
+are tracked host-side — ``positions`` is a host-side mirror kept for
+introspection, and the main loop's sole device→host sync per iteration
+is the sampled-token fetch.
 
 The KV cache stays in the policy's low-bit format end-to-end (the paper's
 attention pipeline); weights may be offline-packed (GEMM pipeline) by
@@ -124,9 +132,11 @@ def _slot_insert(batch_cache, slot_cache, slot: jax.Array):
     """Write a B=1 cache pytree into the batched cache at ``slot``.
 
     Every cache leaf across all families carries batch at axis 1
-    (leaves are stacked (L, B, ...) by construction).  The staging cache
+    (leaves are stacked (L, B, ...) by construction).  The slot cache
     may be shorter than the slab along sequence axes; the splice writes
-    its extent and leaves the tail untouched (causally masked)."""
+    its extent and leaves the tail untouched (causally masked).  Used
+    only by the non-chunked (recurrent / modality-stub) one-shot prefill
+    path — chunked KV engines feed prompts through the main step."""
     def ins(buf, val):
         idx = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)) + \
             tuple(jnp.zeros((), jnp.int32) for _ in range(buf.ndim - 2))
@@ -160,14 +170,6 @@ class Engine:
         self.block_size = config.block_size
         self.prefill_chunk = config.prefill_chunk
         self.max_prompt = config.max_prompt
-        # staging cache length: block-aligned so a paged scatter never
-        # splits a block; identical for both backends so their prefill
-        # graphs (and therefore greedy streams) match bit-for-bit.  The
-        # max_seq clamp only binds for dense engines with a non-block-
-        # aligned max_seq (EngineConfig enforces divisibility for paged).
-        self._staging_len = min(
-            -(-self.max_prompt // self.block_size) * self.block_size,
-            self.max_seq)
         self._extra = self.model.extra_inputs(jax.random.fold_in(key, 2), 1)
         self._has_extra = bool(self._extra)
 
@@ -208,23 +210,29 @@ class Engine:
         self._chunked = self._kv_family and not self._has_extra
 
         self.scheduler = Scheduler(self.n_slots, admit_gate=gate)
-        #: KV-transformer families decode through the Pallas flash-decode
-        #: kernels (paged: in-kernel block-table indirection; dense: the
-        #: slab kernel at the *same* block granularity, so the two
-        #: backends traverse identical tiles and stay byte-identical).
-        #: ``attn_impl="xla"`` opts a dense engine back onto fused XLA
-        #: (useful off-TPU, where the kernels interpret); paged engines
-        #: always page in-kernel.  Recurrent/enc-dec families keep their
-        #: own decode paths.
-        self._attn_kernels = self.model.init_paged_cache is not None and (
-            self._paged or config.attn_impl == "kernel")
+        #: KV-transformer families decode through the Pallas multi-query
+        #: flash-decode kernels (paged: in-kernel block-table
+        #: indirection; dense: the slab kernel at the *same* block
+        #: granularity, so the two backends traverse identical tiles and
+        #: stay byte-identical) — one kernel for prefill chunks,
+        #: preemption replay, and decode.  ``attn_impl="xla"`` opts any
+        #: backend back onto fused XLA (useful off-TPU, where the kernels
+        #: interpret); a paged xla engine gathers a transient
+        #: live-context-capped dense view per step (the one remaining
+        #: ``gather_view`` consumer).  Recurrent/enc-dec families keep
+        #: their own decode paths.
+        self._attn_kernels = (self.model.init_paged_cache is not None
+                              and config.attn_impl == "kernel")
         # dense flash-decode tile height: the paged block size when it
         # divides the slab, else one whole-sequence tile
         self._flash_bs = (self.block_size
                           if self.max_seq % self.block_size == 0
                           else self.max_seq)
-        self.positions = jnp.zeros((self.n_slots,), jnp.int32)
-        self.last_tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        #: host-side mirror of each slot's feed cursor (next KV write
+        #: position), for introspection only — the jit'd step receives
+        #: per-slot positions assembled fresh each iteration, and idle
+        #: slots stay frozen (no drift)
+        self.positions = np.zeros((self.n_slots,), np.int32)
         self._next_rid = 0
         #: live (waiting or running) requests by rid — retired/aborted
         #: requests are dropped once their final RequestOutput is emitted
@@ -237,18 +245,11 @@ class Engine:
         #: routes a subscribed rid's outputs here so interleaved streams
         #: (each driving step() on its own schedule) never lose tokens
         self._stream_bufs: Dict[int, List[RequestOutput]] = {}
-        self._decode = jax.jit(self._decode_fn,
-                               static_argnames=("max_live",))
+        self._step = jax.jit(self._step_fn, static_argnames=("max_live",))
         self._prefill = jax.jit(self._prefill_fn)
-        self._chunk = jax.jit(self._chunk_fn)
         self._insert = jax.jit(_slot_insert)
-        self._scatter = jax.jit(
-            jax.vmap(PKV.scatter_slot, in_axes=(0, 0, None, None)))
         if self.prefix_index is not None:
             self._cow_copy = jax.jit(PKV.copy_block)
-            self._gather_slot = jax.jit(jax.vmap(
-                lambda c, s: PKV.gather_slot(c, s, self._staging_len),
-                in_axes=(0, None)))
         self.t0 = time.perf_counter()
         self.iteration = 0
 
@@ -258,19 +259,25 @@ class Engine:
         return self.model.prefill(params, self.policy, tokens, cache1,
                                   **extra)
 
-    def _chunk_fn(self, params, tokens, cache1, pos):
-        """One ragged-prefill chunk: T prompt tokens through the decode
-        path (writes quantized KV at pos..pos+T-1, attends causally)."""
-        return self.model.decode_step(params, self.policy, tokens, cache1,
-                                      pos)
+    def _step_fn(self, params, tokens, cache, pos, valid, seeds, steps,
+                 temp, top_k, max_live=None):
+        """One mixed prefill/replay/decode iteration over every slot.
 
-    def _decode_fn(self, params, tokens, cache, pos, seeds, steps, temp,
-                   top_k, max_live=None):
+        tokens: (B, t_step) — slot b's next ``valid[b]`` unfed stream
+        tokens (rows past that are padding; KV appends drop them and the
+        sampled logits come from the last valid row).  ``t_step`` is 1
+        for an all-decode batch and ``prefill_chunk`` whenever any slot
+        is mid-prompt or replaying after a preemption — one jit'd
+        function, two compiled shapes."""
         from . import sampler as S
         kw = {}
         if self._attn_kernels:
             kw = dict(attn_impl="pallas", attn_block_s=self._flash_bs,
                       max_live=max_live)
+        elif self._paged:
+            kw = dict(attn_impl="xla", max_live=max_live)
+        if self._chunked:
+            kw["valid"] = valid
         logits, cache = self.model.decode_step(params, self.policy, tokens,
                                                cache, pos, **kw)
         nxt = S.sample(S.slot_keys(seeds, steps), logits, temp, top_k)
@@ -338,8 +345,8 @@ class Engine:
             if self._paged:
                 self._reclaim(req)
             # the freed slot's device state needs no scrub: stale KV is
-            # causally masked and the next occupant's prefill resets
-            # positions/last_tokens for the slot
+            # causally masked and the next occupant's admission resets
+            # the slot's feed cursor
         req.finish_reason = FinishReason.ABORT
         del self._requests[rid]
         return req.make_output([])
@@ -407,7 +414,7 @@ class Engine:
         reference on the same physical block) and only the remainder is
         allocated — a prefix hit admits where a cold request would have
         been deferred.  The COW source is pinned (shared) until
-        ``_do_prefill`` finishes the copy, so a sibling admission's
+        ``_admit`` finishes the copy, so a sibling admission's
         eviction can never race it away.
 
         In growth mode the reservation covers only the effective
@@ -486,15 +493,21 @@ class Engine:
         LRU — which is what lets prefix caching soften the recompute),
         its slot frees, and it requeues at the *front* of the waiting
         queue as ``Status.PREEMPTED``.  Its produced tokens are kept:
-        re-admission re-prefills the prompt and replays them byte-exactly
-        (see ``_do_prefill`` / ``step``)."""
+        re-admission re-feeds its whole stream (prompt + produced) in
+        forced multi-token chunks, byte-exactly (see ``_admit`` /
+        ``step``).  The eviction timestamp opens the recovery-latency
+        window closed at the request's next emission."""
         req.num_preemptions += 1
+        if req.recovery_started is None:
+            req.recovery_started = self.now()
         self._reclaim(req)            # while req.slot is still valid
         self.scheduler.preempt(req)
 
-    def _grow_for_step(self, running: List[Request]) -> List[Request]:
-        """Growth-mode pre-decode pass: make sure every running slot's
-        next append (position ``req.pos``) lands in a mapped block.
+    def _grow_for_step(self, running: List[Request],
+                       valids: Dict[int, int]) -> List[Request]:
+        """Growth-mode pre-step pass: make sure every running slot's
+        next append (positions ``req.pos .. req.pos + valid - 1``) lands
+        in mapped blocks.
 
         Walks the batch oldest-first (rid order) and allocates one block
         per boundary crossing.  When the pool cannot cover a block —
@@ -506,8 +519,9 @@ class Engine:
         and the loop terminates.  Returns the surviving running set."""
         bs = self.block_size
         for req in sorted(running, key=lambda r: r.rid):
+            end = req.pos + valids[req.rid]   # one past the last write
             while (req.status == Status.RUNNING
-                   and req.pos >= len(self._block_map[req.rid]) * bs):
+                   and end > len(self._block_map[req.rid]) * bs):
                 if self.allocator.can_alloc(1):
                     blocks = self._block_map[req.rid]
                     blocks.extend(self.allocator.alloc(1))
@@ -527,25 +541,34 @@ class Engine:
         nb = 1 << (nb - 1).bit_length()
         return min(nb, self.blocks_per_slot) * self.block_size
 
-    # -- prefill -----------------------------------------------------------
+    # -- admission ---------------------------------------------------------
 
-    def _do_prefill(self, req: Request) -> None:
-        """Admit one request: write its prompt KV/state into the slot.
+    def _admit(self, req: Request) -> None:
+        """Install one admitted request into its slot.
 
-        Protocol (unchanged from the dense engine): the last prompt token
-        is *not* consumed here — the slot is left at ``pos = n - 1`` with
-        ``last_tokens = prompt[-1]`` and the next engine iteration decodes
-        it, producing the first output token.
+        Chunked KV families do **no prompt compute here**: the request's
+        feed cursor is seeded at the prefix-cache skip and ``step()``
+        feeds the prompt through the batched multi-token kernel step,
+        quantize-and-writing each chunk straight into the slot's pool
+        blocks / slab rows (pool-direct prefill — no staging cache, no
+        splice).  On a prefix-cache hit the slot's table already maps
+        the shared blocks (the gate set them up), so attention over the
+        skipped extent reads bytes bit-identical to a cold prefill; a
+        pending copy-on-write tail is materialized first (device block
+        copy; the pinned source is released once copied).  Prefix
+        registration waits for the request's first emission, when every
+        block below the frontier is fully written.
 
-        On a prefix-cache hit the slot's table already maps the shared
-        blocks (the gate set them up), so only tokens from
-        ``req.prefix_skip`` onward are staged: the staging cache is
-        seeded by gathering the slot's mapped context — bitwise the bytes
-        a cold prefill of the prefix would have produced — so tail-token
-        attention, and therefore every downstream byte, matches the
-        sharing-disabled engine exactly.  A pending copy-on-write tail is
-        materialized first (device block copy; the pinned source is
-        released once copied)."""
+        Emission protocol (unchanged): the last prompt token's step
+        produces the first output token — at the k-th emission the feed
+        cursor sits at ``n - 1 + k``, exactly the dense engine's
+        historical position arithmetic, so room/finish logic is shared.
+
+        Recurrent-state and modality-stub families keep their one-shot
+        exact-length prefill: no multi-token decode path (or prefill
+        consumes extra encoder inputs), so the prompt minus its last
+        token runs through ``model.prefill`` into a B=1 cache spliced
+        into the slot."""
         n = len(req.prompt)
         if self._paged:
             # blocks were reserved by the admission gate
@@ -557,46 +580,15 @@ class Engine:
                     self.cache = self._cow_copy(self.cache, jnp.int32(src),
                                                 jnp.int32(dst))
                     self.allocator.free([src])     # unpin the COW source
-        skip = req.prefix_skip
         if self._chunked:
-            if n - 1 > skip:
-                # chunked ragged prefill: true prompt length, no pad
-                # tokens; a prefix hit starts mid-prompt against a
-                # staging cache pre-seeded with the shared blocks' bytes
-                if skip:
-                    cache1 = self._gather_slot(self.cache,
-                                               jnp.int32(req.slot))
-                    cache1 = dataclasses.replace(
-                        cache1, length=jnp.full_like(cache1.length, skip))
-                else:
-                    cache1 = self.model.init_cache(self.policy, 1,
-                                                   self._staging_len)
-                s = skip
-                while s < n - 1:
-                    t = min(self.prefill_chunk, n - 1 - s)
-                    toks = jnp.asarray(req.prompt[s:s + t], jnp.int32)[None]
-                    _, cache1 = self._chunk(self.params, toks, cache1,
-                                            jnp.int32(s))
-                    s += t
-                if self._paged:
-                    # scatter only from the prefix frontier on: positions
-                    # below `skip` are bytes gathered *out of* shared
-                    # blocks — rewriting them would be identity traffic
-                    self.cache = self._scatter(self.cache, cache1,
-                                               req.slot, jnp.int32(skip))
-                else:
-                    self.cache = self._insert(self.cache, cache1, req.slot)
-            elif self._paged and skip and n > 1:
-                # full prefix hit (skip == n - 1): no scatter ran, so set
-                # the slot's advisory length directly — live_ctx's
-                # "length >= every true frontier" over-estimate contract
-                # must hold for the gather fallbacks even though the
-                # engine's own decode always passes max_live
-                ln = self.cache.length.at[:, req.slot].set(n - 1)
-                self.cache = dataclasses.replace(self.cache, length=ln)
-            if self.prefix_index is not None:
-                self._register_prefix(req)
-        elif n > 1 or self._has_extra:
+            # feed everything from the prefix frontier on — including
+            # any output produced before a preemption (its blocks are
+            # gone; the forced chunks rewrite their KV byte-exactly)
+            req.pos = req.prefix_skip
+            req.needs_register = self.prefix_index is not None
+            self.positions[req.slot] = req.pos
+            return
+        if n > 1 or self._has_extra:
             # one-shot exact-length prefill: recurrent-state families (no
             # multi-token decode) and modality-stub families (extra
             # encoder inputs are consumed by prefill).  P >= 1 keeps
@@ -616,19 +608,8 @@ class Engine:
             # slot's state (stale state is not masked by any causal mask)
             cache1 = self.model.init_cache(self.policy, 1, self.max_seq)
             self.cache = self._insert(self.cache, cache1, req.slot)
-        # KV families with n == 1 write nothing: stale slot entries are
-        # causally masked (kpos <= pos) and overwritten by decode appends
-        # before they could become visible.
         req.pos = n - 1
-        self.positions = self.positions.at[req.slot].set(n - 1)
-        self.last_tokens = self.last_tokens.at[req.slot, 0].set(
-            req.prompt[-1])
-        # preemption recovery: tokens produced before the eviction are
-        # *replayed* through the ordinary decode path (forced, not
-        # sampled) so their KV is rewritten by the exact kernels and
-        # inputs of the original run — byte-exact recompute.  Empty for
-        # fresh requests.
-        req.replay = list(req.output)
+        self.positions[req.slot] = req.pos
 
     # -- main loop ---------------------------------------------------------
 
@@ -668,37 +649,67 @@ class Engine:
         return reason
 
     def step(self) -> List[RequestOutput]:
-        """One engine iteration: admit + prefill new, decode all running
-        slots together, retire finished requests.
+        """One engine iteration: admit waiting requests, feed every
+        running slot its next stream tokens through one batched kernel
+        step, retire finished requests.
 
-        Returns one :class:`RequestOutput` per running request — a delta
-        of exactly one new token plus the cumulative output; finished
-        requests carry ``finish_reason`` and final timing metrics.
-        Growth mode may additionally grow/preempt before the decode
-        (preempted requests emit nothing until recovered), and slots
-        replaying after a preemption emit nothing (their tokens were
-        already streamed)."""
+        Each request's prompt + produced output is one logical token
+        stream; ``Request.pos`` counts how much of it has been fed.  The
+        scheduler's plan picks the step width: 1 when every slot is in
+        steady-state decode, ``prefill_chunk`` when any slot is
+        mid-prompt or recovering from a preemption — prefill chunks and
+        decode rows share the batch (decode rows carry ``valid == 1``,
+        their padding dropped by the ragged mask), so a request's stream
+        is invariant to what else shares the batch *and* to the chunk
+        partition.  A slot emits a token only on the iteration that
+        consumes its last unfed stream token; iterations that re-feed
+        already-streamed output after a preemption count as
+        ``replay_iterations`` — O(produced / prefill_chunk) per
+        preemption, not O(produced).
+
+        Returns one :class:`RequestOutput` per *emitting* request — a
+        delta of exactly one new token plus the cumulative output;
+        finished requests carry ``finish_reason`` and final timing
+        metrics.  Growth mode may additionally grow/preempt before the
+        step (preempted requests emit nothing until recovered)."""
         self.iteration += 1
         for req in self.scheduler.admit():
-            self._do_prefill(req)
+            self._admit(req)
         running = self.scheduler.running()
-        if self._growth and running:
-            # lazy growth (and any preemption it forces) runs *before*
-            # the batched decode, so every surviving slot's next append
-            # lands in a mapped block — sentinel-dropped writes would
-            # silently corrupt the new token's own attention read
-            running = self._grow_for_step(running)
         if not running:
             return []
+        chunk = self.prefill_chunk if self._chunked else 1
+        t_step, valids = self.scheduler.plan(chunk)
+        if self._growth:
+            # lazy growth (and any preemption it forces) runs *before*
+            # the batched step, so every surviving slot's appends land
+            # in mapped blocks — sentinel-dropped writes would silently
+            # corrupt the new tokens' own attention reads.  Preemption
+            # shrinks the running set, so re-plan (the step may narrow
+            # back to width 1).
+            running = self._grow_for_step(running, valids)
+            if not running:
+                return []
+            t_step, valids = self.scheduler.plan(chunk)
 
-        # per-slot sampling vectors, assembled host-side (numpy) and
-        # handed to the jit'd decode as four single transfers — no
-        # per-request scatter dispatches in the hot loop
+        # per-slot feed + sampling vectors, assembled host-side (numpy)
+        # and handed to the jit'd step as single transfers — no
+        # per-request scatter dispatches in the hot loop.  Idle slots
+        # feed token 0 at position 0 with valid == 0: their writes are
+        # dropped and their sampled logits discarded.
+        tokens = np.zeros((self.n_slots, t_step), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        valid = np.zeros((self.n_slots,), np.int32)
         temp = np.zeros((self.n_slots,), np.float32)
         top_k = np.zeros((self.n_slots,), np.int32)
         seeds = np.zeros((self.n_slots,), np.uint32)
         steps = np.zeros((self.n_slots,), np.int32)
         for r in running:
+            v = valids[r.rid]
+            stream = r.prompt + r.output
+            tokens[r.slot, :v] = stream[r.pos:r.pos + v]
+            pos[r.slot] = r.pos
+            valid[r.slot] = v
             temp[r.slot] = r.params.temperature
             top_k[r.slot] = r.params.top_k
             seeds[r.slot] = r.seed
@@ -707,43 +718,36 @@ class Engine:
         # paged: bound the kernel's grid (and its HBM traffic) by the
         # batch's live-context high-water mark, not worst-case max_seq
         max_live = self._live_bucket(running) if self._paged else None
-        nxt, self.cache = self._decode(self.params, self.last_tokens,
-                                       self.cache, self.positions, seeds,
-                                       steps, temp, top_k,
-                                       max_live=max_live)
-        # only slots that decoded this iteration advance their device
-        # position — unoccupied slots stay frozen.  (Incrementing every
-        # slot unconditionally let idle slots drift without bound: a
-        # long-lived engine kept writing clamped garbage with
-        # ever-growing RoPE positions and would eventually overflow
-        # int32.)
-        inc = np.zeros((self.n_slots,), np.int32)
-        for r in running:
-            inc[r.slot] = 1
-        self.positions = self.positions + jnp.asarray(inc)
+        nxt, self.cache = self._step(self.params, jnp.asarray(tokens),
+                                     self.cache, jnp.asarray(pos),
+                                     jnp.asarray(valid), seeds, steps,
+                                     temp, top_k, max_live=max_live)
         t = self.now()
         nxt_host = np.asarray(jax.device_get(nxt))
-        if any(r.replay for r in running):
-            nxt_host = nxt_host.copy()          # device_get may be RO
         outputs: List[RequestOutput] = []
-        forced = False
         for r in running:
-            if r.replay:
-                # preemption recovery: this position's token is already
-                # known (and was already streamed) — force it as the
-                # slot's next input instead of the sampled value and
-                # emit nothing.  The decode above rewrote its KV through
-                # the exact kernels/inputs of the original run, so the
-                # stream stays byte-identical once replay drains.
-                nxt_host[r.slot] = r.replay.pop(0)
-                r.pos += 1
-                forced = True
+            r.pos += valids[r.rid]
+            self.positions[r.slot] = r.pos
+            if r.pos < len(r.prompt) + len(r.output):
+                # non-emitting: the prompt is still prefilling, or a
+                # preempted request is re-feeding tokens it already
+                # streamed (forced, not sampled — byte-exact recovery)
+                if r.pos > len(r.prompt):
+                    r.replay_iterations += 1
                 continue
             tok = int(nxt_host[r.slot])
             if r.first_token_time is None:
                 r.first_token_time = t
+            if r.recovery_started is not None:
+                # eviction → this emission: the stream is caught up
+                r.recovery_time += t - r.recovery_started
+                r.recovery_started = None
+            if r.needs_register:
+                # first emission: every block below the frontier is now
+                # fully written — safe to publish in the prefix index
+                self._register_prefix(r)
+                r.needs_register = False
             r.output.append(tok)
-            r.pos += 1
             reason = self._finish_reason(r, tok)
             if reason is not None:
                 r.finish_reason = reason
@@ -755,8 +759,6 @@ class Engine:
             outputs.append(out)
             if r.rid in self._stream_bufs:
                 self._stream_bufs[r.rid].append(out)
-        self.last_tokens = (jnp.asarray(nxt_host)[:, None] if forced
-                            else nxt[:, None])
         return outputs
 
     def generate(self, prompts: Sequence[Sequence[int]],

@@ -103,6 +103,12 @@ class RequestOutput:
     engine (always 0 unless ``enable_block_growth``); the token stream
     is unaffected — preemption recovery is byte-exact — but latency is
     not, so the count is surfaced for observability.
+    ``replay_iterations`` counts the non-emitting engine iterations
+    spent re-feeding already-produced tokens after preemptions (the
+    one-chunk recovery path keeps this O(produced / prefill_chunk) per
+    preemption instead of O(produced)), and ``recovery_time`` is the
+    total wall-clock seconds between each eviction and the request's
+    next emission.
     """
 
     rid: int
@@ -113,6 +119,8 @@ class RequestOutput:
     finish_reason: Optional[FinishReason] = None
     cached_tokens: int = 0
     num_preemptions: int = 0
+    replay_iterations: int = 0
+    recovery_time: float = 0.0
 
     # final metrics (populated on the finished output) -------------------
     ttft: Optional[float] = None        # first-token latency (s)
@@ -134,9 +142,13 @@ class Request:
     # lifecycle (filled by the engine) ----------------------------------
     status: Status = Status.WAITING
     slot: int = -1
-    #: host-side mirror of the slot's decode position — advanced
-    #: deterministically (prompt_len - 1, then +1 per decode step) so the
-    #: main loop never syncs the device positions array.
+    #: tokens *fed* through the model so far — the unified feed cursor.
+    #: prompt + produced output form one logical token stream E; ``pos``
+    #: counts how many of its tokens have been run through decode_step
+    #: (admission seeds it at the prefix-cache skip).  At the k-th
+    #: emission ``pos == prompt_len - 1 + k``, which is exactly the
+    #: slot's newest written KV position — the main loop never syncs the
+    #: device positions array.
     pos: int = 0
     output: List[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[FinishReason] = None
@@ -153,12 +165,18 @@ class Request:
     prefix_hashes: List[bytes] = dataclasses.field(default_factory=list)
     #: times this request was preempted by the block-growth engine
     num_preemptions: int = 0
-    #: already-produced tokens still to be *replayed* through the decode
-    #: path after a preemption re-admission: the engine forces each one
-    #: as the slot's next token instead of sampling, so the recomputed
-    #: KV is written by the exact same kernels/inputs as the original
-    #: run (byte-exact recovery; engine-internal)
-    replay: List[int] = dataclasses.field(default_factory=list)
+    #: non-emitting iterations spent re-feeding already-produced tokens
+    #: after preemptions (one forced multi-token chunk per iteration —
+    #: recovery is O(produced / prefill_chunk) steps, not O(produced))
+    replay_iterations: int = 0
+    #: cumulative eviction → next-emission wall-clock seconds
+    recovery_time: float = 0.0
+    #: set at eviction, closed out at the next emission (engine-internal)
+    recovery_started: Optional[float] = None
+    #: prompt blocks still to be published in the prefix index at the
+    #: request's first emission — registration waits until the blocks
+    #: below the frontier are fully written (engine-internal)
+    needs_register: bool = False
 
     @property
     def ttft(self) -> Optional[float]:
@@ -189,5 +207,7 @@ class Request:
             finished=done, finish_reason=self.finish_reason if done else None,
             cached_tokens=self.cached_tokens,
             num_preemptions=self.num_preemptions,
+            replay_iterations=self.replay_iterations,
+            recovery_time=self.recovery_time,
             ttft=self.ttft if done else None,
             latency=self.latency if done else None)

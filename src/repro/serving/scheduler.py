@@ -92,6 +92,27 @@ class Scheduler:
         """Requests currently occupying slots, in slot order."""
         return [r for r in self.slots if r is not None]
 
+    def plan(self, chunk: int):
+        """Mixed-step plan: one batched iteration's feed width and the
+        per-request token counts (persistent-batch continuous batching).
+
+        Each running request needs ``len(prompt) + len(output) - pos``
+        more tokens fed before it produces its next emission — > 1 while
+        a prompt is still prefilling or produced-but-unfed tokens await
+        replay after a preemption, exactly 1 in steady-state decode.
+        The step width ``t_step`` is ``chunk`` when *any* running
+        request needs more than one token (prefill chunks and decode
+        rows share the batch; decode rows just have ``valid == 1``) and
+        1 when all are decoding — so an all-decode batch never pays a
+        padded chunk, and its step shapes match a chunk-free engine's.
+
+        Returns ``(t_step, {rid: valid})`` with ``valid = min(t_step,
+        need)`` per running request."""
+        need = {r.rid: len(r.prompt) + len(r.output) - r.pos
+                for r in self.running()}
+        t_step = chunk if any(n > 1 for n in need.values()) else 1
+        return t_step, {rid: min(t_step, n) for rid, n in need.items()}
+
     def victim(self) -> Optional[Request]:
         """Preemption victim: the *youngest* running request (highest
         rid — rids are monotone in submission order, and a preempted

@@ -114,6 +114,31 @@ class TestEngineConfigValidation:
                            reserve_headroom_blocks=1)
         assert cfg.enable_block_growth
 
+    def test_chunk_block_straddle_rejected(self):
+        """Kernel prefill writes chunks straight into pool blocks: a
+        chunk that straddles a block boundary (divides neither way) is a
+        cross-field rejection with a CLI-visible hint; tiling either way
+        and the XLA opt-out stay valid."""
+        with pytest.raises(EngineError, match="prefill_chunk"):
+            EngineConfig(model=SMOLLM, cache_kind="paged", max_seq=96,
+                         block_size=16, prefill_chunk=24)
+        ap = argparse.ArgumentParser()
+        EngineConfig.add_cli_args(ap)
+        args = ap.parse_args(["--cache-kind", "paged", "--max-seq", "96",
+                              "--block-size", "16", "--prefill-chunk",
+                              "24"])
+        with pytest.raises(EngineError, match="--prefill-chunk"):
+            EngineConfig.from_cli(args)
+        # chunk tiles a block / spans whole blocks: both fine
+        EngineConfig(model=SMOLLM, cache_kind="paged", max_seq=96,
+                     block_size=16, prefill_chunk=8)
+        EngineConfig(model=SMOLLM, cache_kind="paged", max_seq=96,
+                     block_size=16, prefill_chunk=32)
+        # the gather_view opt-out never touches pool-block writes
+        # mid-kernel, so the alignment constraint does not apply
+        EngineConfig(model=SMOLLM, cache_kind="paged", max_seq=96,
+                     block_size=16, prefill_chunk=24, attn_impl="xla")
+
     def test_growth_cli_roundtrip(self):
         ap = argparse.ArgumentParser()
         EngineConfig.add_cli_args(ap)

@@ -254,31 +254,44 @@ class TestAttnImplKnob:
         out = eng.generate([[3, 1, 4]], SamplingParams(max_new_tokens=4))
         assert len(out[0].output_token_ids) == 4
 
-    def test_paged_ignores_xla_opt_out(self):
-        """Paged engines page in-kernel regardless of the knob."""
+    def test_paged_xla_opt_out_matches_kernel(self):
+        """attn_impl="xla" on a paged engine takes the capped gather_view
+        fallback (its one remaining consumer) and must stream the exact
+        same bytes as the in-kernel default."""
         from repro.configs import get_reduced
-        from repro.serving import EngineConfig
+        from repro.serving import EngineConfig, SamplingParams
         from repro.serving.engine import Engine
-        eng = Engine(EngineConfig(model=get_reduced("smollm-360m"),
-                                  policy="w4a16kv8", n_slots=2, max_seq=32,
-                                  max_prompt=8, seed=0, cache_kind="paged",
-                                  block_size=8, attn_impl="xla",
-                                  prefill_chunk=4))
-        assert eng._attn_kernels
+
+        def run(impl):
+            eng = Engine(EngineConfig(model=get_reduced("smollm-360m"),
+                                      policy="w4a16kv8", n_slots=2,
+                                      max_seq=32, max_prompt=8, seed=0,
+                                      cache_kind="paged", block_size=8,
+                                      attn_impl=impl, prefill_chunk=4))
+            assert eng._attn_kernels == (impl == "kernel")
+            return eng.generate([[3, 1, 4, 1, 5], [9, 2, 6]],
+                                SamplingParams(max_new_tokens=6))
+
+        got = {impl: [o.output_token_ids for o in run(impl)]
+               for impl in ("kernel", "xla")}
+        assert got["kernel"] == got["xla"]
 
 
 class TestMultiTokenFallback:
-    def test_chunked_paged_fallback_keeps_own_keys(self, key):
-        """T>1 paged decode (capped-gather fallback) with a tight
-        ``max_live`` must still see the chunk's own just-appended keys:
-        the cap is widened by T-1 before gathering."""
+    @pytest.mark.parametrize("impl", ["fused", "xla"])
+    def test_chunked_paged_keeps_own_keys(self, key, impl):
+        """T>1 paged attention with a tight ``max_live`` must still see
+        the chunk's own just-appended keys on both the in-kernel path
+        and the capped-gather opt-out (which widens the cap by T-1
+        before gathering)."""
         from repro.models import common as C
         spec, dense, paged = _paired(key, "kv8", lengths=[18, 18])
         q4 = jax.random.normal(jax.random.fold_in(key, 5), (2, 4, 4, 32),
                                jnp.float32).astype(jnp.bfloat16)
         pos = jnp.array([14, 14], jnp.int32)   # chunk covers 14..17
-        out_capped = C.attend_decode(q4, paged, spec, pos, max_live=15)
-        out_full = C.attend_decode(q4, paged, spec, pos)
+        out_capped = C.attend_decode(q4, paged, spec, pos, impl=impl,
+                                     max_live=15)
+        out_full = C.attend_decode(q4, paged, spec, pos, impl=impl)
         np.testing.assert_array_equal(np.asarray(out_capped),
                                       np.asarray(out_full))
 

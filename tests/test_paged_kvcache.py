@@ -388,20 +388,6 @@ def test_copy_block_bitwise(key, fmt):
         np.testing.assert_array_equal(b[mask], a[mask], err_msg=leaf)
 
 
-def test_gather_slot_matches_gather_view(key):
-    """gather_slot is exactly one row of gather_view (pure byte copy)."""
-    spec, _, paged = _paired_caches("kv8", B=3, H=2, D=16, bs=4, max_seq=16)
-    k = jax.random.normal(key, (3, 9, 2, 16), jnp.float32) \
-        .astype(jnp.bfloat16)
-    paged = PKV.append_paged(paged, k, -k, jnp.zeros((3,), jnp.int32), spec)
-    full = PKV.gather_view(paged, 8)
-    one = PKV.gather_slot(paged, jnp.int32(1), 8)
-    for leaf in ("k", "v", "k_scale", "v_scale"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(one, leaf)[0]),
-            np.asarray(getattr(full, leaf)[1]), err_msg=leaf)
-
-
 # ---------------------------------------------------------------------------
 # Paged vs dense equivalence (per-format, ragged positions)
 # ---------------------------------------------------------------------------
@@ -455,49 +441,41 @@ def test_append_read_matches_dense(key, fmt):
 
 
 @pytest.mark.parametrize("fmt", ["kv16", "kv8", "kv4"])
-def test_scatter_slot_matches_dense_splice(key, fmt):
-    """Prefill staging → block scatter lands bit-identical to the staging
-    buffer (no requantization on the move)."""
-    spec = _spec(fmt)
-    S, H, D, bs = 8, 2, 16, 4
-    stage = KV.init_cache(1, S, H, D, spec)
-    k = jax.random.normal(key, (1, 6, H, D), jnp.float32) \
+def test_valid_masked_append_drops_padded_rows(key, fmt):
+    """``append_paged(valid=...)``/``append_per_slot(valid=...)``: rows
+    past a slot's valid count must leave the store untouched (padded
+    mixed-step rows would otherwise dirty live cells of refcounted
+    shared blocks), while valid rows land bit-identical to an unmasked
+    append of the same tokens."""
+    B, T, H, D = 3, 4, 2, 16
+    spec, dense, paged = _paired_caches(fmt, B=B, H=H, D=D)
+    pos = jnp.array([0, 3, 7], jnp.int32)
+    valid = jnp.array([4, 1, 2], jnp.int32)
+    k = jax.random.normal(key, (B, T, H, D), jnp.float32) \
         .astype(jnp.bfloat16)
-    stage = KV.append(stage, k, -k, jnp.int32(0), spec)
-
-    spec2, _, paged = _paired_caches(fmt, B=2, H=H, D=D, bs=bs, max_seq=S)
-    paged = PKV.scatter_slot(paged, stage, jnp.int32(1))
-    view = PKV.gather_view(paged)
-    np.testing.assert_array_equal(np.asarray(view.k[1, :6]),
-                                  np.asarray(stage.k[0, :6]))
-    np.testing.assert_array_equal(np.asarray(view.v_scale[1, :6]),
-                                  np.asarray(stage.v_scale[0, :6]))
-    assert int(view.length[1]) == 6
-
-
-def test_scatter_slot_start_skips_prefix(key):
-    """``scatter_slot(start=k)`` drops positions below ``k`` (the prefix
-    a cache hit already holds in shared blocks) and still lands the tail
-    bit-identically."""
-    spec = _spec("kv8")
-    S, H, D, bs = 8, 2, 16, 4
-    stage = KV.init_cache(1, S, H, D, spec)
-    k = jax.random.normal(key, (1, 8, H, D), jnp.float32) \
-        .astype(jnp.bfloat16)
-    stage = KV.append(stage, k, -k, jnp.int32(0), spec)
-
-    _, _, paged = _paired_caches("kv8", B=2, H=H, D=D, bs=bs, max_seq=S)
-    before = np.asarray(paged.k).copy()
-    out = PKV.scatter_slot(paged, stage, jnp.int32(1), start=jnp.int32(6))
-    view = PKV.gather_view(out)
-    # positions >= start landed …
-    np.testing.assert_array_equal(np.asarray(view.k[1, 6:8]),
-                                  np.asarray(stage.k[0, 6:8]))
-    # … while the slot's first block (positions < start live there) kept
-    # its prior pool bytes — no write traffic below the frontier
-    first_block = int(out.block_table[1, 0])
-    np.testing.assert_array_equal(np.asarray(out.k)[first_block],
-                                  before[first_block])
+    v = -k
+    out_p = PKV.append_paged(paged, k, v, pos, spec, valid=valid)
+    out_d = KV.append_per_slot(dense, k, v, pos, spec, valid=valid)
+    # reference: per-slot unmasked appends of only the valid rows
+    view = PKV.gather_view(out_p)
+    for b in range(B):
+        n = int(valid[b])
+        ref = KV.append_per_slot(
+            dense, k[:, :n], v[:, :n], pos, spec)
+        for got in (view, out_d):
+            np.testing.assert_array_equal(
+                np.asarray(got.k[b, int(pos[b]):int(pos[b]) + n]),
+                np.asarray(ref.k[b, int(pos[b]):int(pos[b]) + n]),
+                err_msg=f"{fmt} slot {b} valid rows")
+        # cells past the valid frontier stay at their init bytes
+        np.testing.assert_array_equal(
+            np.asarray(out_d.k[b, int(pos[b]) + n:]),
+            np.asarray(dense.k[b, int(pos[b]) + n:]),
+            err_msg=f"{fmt} slot {b} padded rows (dense)")
+        np.testing.assert_array_equal(
+            np.asarray(view.k[b, int(pos[b]) + n:]),
+            np.asarray(PKV.gather_view(paged).k[b, int(pos[b]) + n:]),
+            err_msg=f"{fmt} slot {b} padded rows (paged)")
 
 
 def test_unmapped_writes_dropped(key):

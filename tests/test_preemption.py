@@ -143,6 +143,30 @@ class TestPreemption:
         assert preempted_iters > 0                 # preemption did fire
         assert len(per_rid[r0]) == len(per_rid[r1]) == 12
 
+    def test_recovery_is_chunked_not_per_token(self):
+        """Preemption recovery re-feeds already-streamed tokens in
+        forced multi-token chunks: the non-emitting replay iterations
+        per preemption are O(stream / prefill_chunk), not O(stream),
+        and the final output surfaces the replay/recovery metrics."""
+        eng = _mk(enable_block_growth=True, n_slots=2, n_blocks=4)
+        sp = SamplingParams(max_new_tokens=12)
+        r0, r1 = eng.submit(PROMPTS[0], sp), eng.submit(PROMPTS[1], sp)
+        final = _drain(eng)
+        vic = final[r1]
+        assert vic.num_preemptions >= 1
+        assert vic.replay_iterations >= 1
+        # hard O(stream / chunk) bound: each recovery re-feeds at most
+        # the full stream (prompt + produced) in prefill_chunk bites —
+        # with chunk 4 and a 17-token stream that is <= 5 iterations per
+        # preemption, where per-token replay would take up to 12
+        stream = len(PROMPTS[1]) + sp.max_new_tokens
+        cap = -(-stream // eng.prefill_chunk)
+        assert vic.replay_iterations <= vic.num_preemptions * cap
+        assert vic.recovery_time > 0
+        # the never-evicted oldest request carries clean metrics
+        assert final[r0].replay_iterations == 0
+        assert final[r0].recovery_time == 0
+
     def test_higher_admitted_concurrency_than_reservation(self):
         """Over-committed pool, short-finishing requests: growth admits
         strictly more concurrently than worst-case reservation."""
